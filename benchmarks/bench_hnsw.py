@@ -1,0 +1,96 @@
+"""Paper Table I reproduction: HNSW on Fashion-MNIST-like and SIFT-like data.
+
+Reports the paper's metrics: construction time (graph build machinery),
+insertion time, search time at ef ∈ {64, 128}, recall rate, last-distances
+ratio, mean fraction of neighbours returned, and QPS.
+
+Offline-container deltas (DESIGN.md §8): datasets are statistically matched
+synthetics; corpus sizes are scaled to the CPU budget (the paper ran 60k/1M
+on a t4g.xlarge for hours) with the scale factor printed; wall-clock numbers
+are host-CPU and NOT comparable to the paper's instance — recall/ratio
+metrics are the comparable part.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HNSWConfig, bulk_build, exact_knn, recall_at_k
+from repro.core.hnsw_build import build as incremental_build, \
+    preprocess_vectors
+from repro.core.hnsw_search import search, to_device
+from repro.data.synthetic import fashion_mnist_like, sift_like
+
+K = 10
+
+
+def run_dataset(name: str, corpus: np.ndarray, queries: np.ndarray,
+                metric: str = "l2", builder: str = "incremental",
+                ef_values=(64, 128)) -> List[Dict]:
+    cfg = HNSWConfig(M=16, ef_construction=100, metric=metric)
+    t0 = time.perf_counter()
+    build_fn = incremental_build if builder == "incremental" else bulk_build
+    packed = build_fn(corpus, cfg)
+    t_build = time.perf_counter() - t0
+
+    g, max_level, dev_metric = to_device(packed)
+    gt = exact_knn(queries, corpus, K, metric=metric)
+    gt_d = np.sort(
+        ((preprocess_vectors(queries, metric)[:, None, :]
+          - preprocess_vectors(corpus, metric)[gt]) ** 2).sum(-1), axis=1)
+
+    rows = []
+    for ef in ef_values:
+        q_dev = jnp.asarray(preprocess_vectors(queries, metric))
+        # warm (compile)
+        search(g, q_dev[:4], k=K, ef=ef, max_level=max_level,
+               metric=dev_metric)[1].block_until_ready()
+        t0 = time.perf_counter()
+        d, ids = search(g, q_dev, k=K, ef=ef, max_level=max_level,
+                        metric=dev_metric)
+        ids.block_until_ready()
+        t_search = time.perf_counter() - t0
+        ids_np = np.asarray(ids)
+        rec = recall_at_k(ids_np, gt)
+        filled = (ids_np >= 0).mean()
+        # last-distances ratio (ann-benchmarks): found kth / true kth
+        found_vecs = preprocess_vectors(corpus, metric)[
+            np.maximum(ids_np[:, -1], 0)]
+        qn = preprocess_vectors(queries, metric)
+        found_last = ((qn - found_vecs) ** 2).sum(-1)
+        ldr = float(np.mean(np.sqrt(np.maximum(found_last, 1e-12))
+                            / np.sqrt(np.maximum(gt_d[:, -1], 1e-12))))
+        rows.append({
+            "dataset": name, "builder": builder, "ef": ef,
+            "n": len(corpus), "construction_s": round(t_build, 3),
+            "search_s": round(t_search, 4),
+            "qps": round(len(queries) / t_search, 1),
+            "recall": round(rec, 4),
+            "fraction_returned": round(float(filled), 4),
+            "last_dist_ratio": round(ldr, 4),
+        })
+    return rows
+
+
+def main(n_fmnist: int = 6000, n_sift: int = 8000, n_queries: int = 200,
+         builder: str = "incremental"):
+    print(f"# Table I reproduction (scaled: fmnist {n_fmnist}/60k, "
+          f"sift {n_sift}/1M; builder={builder})")
+    rows = []
+    rows += run_dataset("fashion-mnist-784",
+                        fashion_mnist_like(n_fmnist, seed=0),
+                        fashion_mnist_like(n_queries, seed=1),
+                        builder=builder)
+    rows += run_dataset("sift-128", sift_like(n_sift, seed=0),
+                        sift_like(n_queries, seed=1), builder=builder)
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

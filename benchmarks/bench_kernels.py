@@ -1,0 +1,79 @@
+"""Kernel microbenchmark (paper §II-B-3 SIMD claims, TPU form).
+
+Two numbers per kernel:
+  * wall-clock µs/call of the jnp oracle on this host CPU (what we can run)
+  * analytic TPU-v5e roofline time for the same shape (what the BlockSpec
+    tiling is designed for): max(flops/197e12, bytes/819e9)
+
+The interpret-mode Pallas path is correctness-validated in tests; timing it
+would measure the Python interpreter, so the oracle timing stands in for the
+arithmetic while the analytic column stands in for the TPU target.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main() -> List[Dict]:
+    rng = np.random.RandomState(0)
+    rows = []
+
+    # L2 distance: 1024 queries x 100k corpus x 128d (SIFT-scale tile)
+    q = jnp.asarray(rng.randn(1024, 128), jnp.float32)
+    x = jnp.asarray(rng.randn(100_000, 128), jnp.float32)
+    f = jax.jit(ref.l2_distance_ref)
+    us = _time(f, q, x) * 1e6
+    flops = 2.0 * 1024 * 100_000 * 128
+    bytes_ = (1024 * 128 + 100_000 * 128 + 1024 * 100_000) * 4
+    rows.append({"name": "l2_distance_1024x100k_d128", "us_per_call": round(us, 1),
+                 "derived": f"tpu_roofline_us={max(flops / PEAK_FLOPS, bytes_ / HBM_BW) * 1e6:.1f}"})
+
+    # PQ ADC: 1024 queries x 1M codes, m=16 k=256
+    lut = jnp.asarray(rng.rand(64, 16, 256), jnp.float32)
+    codes = jnp.asarray(rng.randint(0, 256, (1_000_000, 16)), jnp.uint8)
+    f = jax.jit(ref.pq_adc_ref)
+    us = _time(f, lut, codes) * 1e6
+    bytes_ = (64 * 16 * 256 * 4 + 1_000_000 * 16 + 64 * 1_000_000 * 4)
+    flops = 64 * 1_000_000 * 16
+    rows.append({"name": "pq_adc_64x1M_m16", "us_per_call": round(us, 1),
+                 "derived": f"tpu_roofline_us={max(flops / PEAK_FLOPS, bytes_ / HBM_BW) * 1e6:.1f}"})
+
+    # Hamming: 256 queries x 1M codes, 256 bits
+    qc = jnp.asarray(rng.randint(0, 2 ** 31, (256, 8)), jnp.uint32)
+    xc = jnp.asarray(rng.randint(0, 2 ** 31, (1_000_000, 8)), jnp.uint32)
+    f = jax.jit(ref.hamming_ref)
+    us = _time(f, qc, xc) * 1e6
+    bytes_ = (256 * 32 + 1_000_000 * 32 + 256 * 1_000_000 * 4)
+    flops = 3.0 * 256 * 1_000_000 * 8
+    rows.append({"name": "hamming_256x1M_256b", "us_per_call": round(us, 1),
+                 "derived": f"tpu_roofline_us={max(flops / PEAK_FLOPS, bytes_ / HBM_BW) * 1e6:.1f}"})
+
+    print("# kernel microbenchmarks (host-CPU oracle µs + TPU analytic)")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,287 @@
+"""HLO-text cost analysis with loop trip-count accounting.
+
+Why this exists: XLA-CPU's ``compiled.cost_analysis()`` counts a ``while``
+body's cost ONCE, but scanned-layer models execute it n_layers times — flops,
+bytes and collective traffic would all be undercounted by ~n_layers×
+(calibrated in tests/test_hlo_cost.py).  This parser walks the post-SPMD HLO
+call graph, multiplies loop bodies by their trip counts, and produces:
+
+  flops            — 2·M·N·K for dots, |shape| for elementwise/reduce
+  bytes_naive      — every op's operands+results (unfused upper bound)
+  bytes_fused      — materialisation estimate: dots, gathers/scatters,
+                     reduces, copies, slices/DUS, converts at function
+                     boundaries, collectives (what a fused TPU program
+                     actually moves through HBM)
+  collective bytes — by kind (all-reduce / all-gather / reduce-scatter /
+                     all-to-all / collective-permute), trip-multiplied
+
+All values are per-device (post-SPMD shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_RE_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_RE_OP = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)\)(.*)$")
+_RE_COMP_HEAD = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_RE_CALLS = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations|"
+    r"true_computation|false_computation)=\{?%?([\w.\-]+)")
+_RE_CONST = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+_RE_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "tanh", "log", "log-plus-one",
+    "rsqrt", "sqrt", "negate", "abs", "sign", "floor", "ceil", "cosine",
+    "sine", "logistic", "select", "compare", "and", "or", "xor", "not",
+    "clamp", "round-nearest-afz", "round-nearest-even", "remainder", "atan2",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "popcnt", "clz", "cbrt", "erf",
+}
+_MATERIALIZING = {
+    "dot", "gather", "scatter", "reduce", "reduce-window", "copy",
+    "dynamic-slice", "dynamic-update-slice", "slice", "concatenate", "pad",
+    "sort", "iota", "broadcast", "transpose", "reverse", "convolution",
+    "cholesky", "triangular-solve", "rng", "rng-bit-generator", "custom-call",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "opt-barrier", "partition-id", "replica-id", "domain",
+         "get-dimension-size", "reshape", "convert", "copy-start",
+         "copy-done", "send", "recv", "send-done", "recv-done"}
+
+
+def _shape_list_bytes_elems(type_str: str) -> Tuple[int, int]:
+    """All shapes in a type string -> (total bytes, total elements)."""
+    total_b = total_e = 0
+    for dtype, dims in _RE_SHAPE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dtype]
+    return total_b, total_e
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes_naive: float = 0.0
+    bytes_fused: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_count: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    # (callee, kind) pairs; kind "while" multiplies by trip count
+    calls: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    max_int_const: int = 1
+
+    def add(self, other: "CompCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes_naive += other.bytes_naive * mult
+        self.bytes_fused += other.bytes_fused * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+            self.coll_count[k] += other.coll_count[k] * mult
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes_naive: float
+    bytes_fused: float
+    coll_bytes: Dict[str, float]
+    coll_count: Dict[str, float]
+    loops: List[Tuple[str, int]]
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    def coll_summary(self) -> str:
+        parts = [
+            f"{k}:{int(self.coll_count[k])}x{self.coll_bytes[k]/1e6:.1f}MB"
+            for k in sorted(self.coll_bytes) if self.coll_count[k]]
+        return " ".join(parts) or "none"
+
+
+def _parse_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _RE_COMP_HEAD.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+_RE_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+
+
+def _first_shape_dims(type_str: str) -> List[int]:
+    m = _RE_SHAPE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def _cost_of_computation(lines: List[str]) -> CompCost:
+    c = CompCost()
+    # pass 1: symbol table (scheduled HLO references operands by bare name)
+    sym: Dict[str, Tuple[int, int, List[int]]] = {}
+    parsed = []
+    for line in lines:
+        mc = _RE_CONST.search(line)
+        if mc:
+            c.max_int_const = max(c.max_int_const, int(mc.group(1)))
+        m = _RE_OP.match(line)
+        if not m:
+            continue
+        name, result_type, op, operands, tail = m.groups()
+        b, e = _shape_list_bytes_elems(result_type)
+        sym[name] = (b, e, _first_shape_dims(result_type))
+        parsed.append((name, result_type, op, operands, tail))
+
+    def operand_names(operands: str) -> List[str]:
+        return [n for n in _RE_OPERAND_NAME.findall(operands) if n in sym]
+
+    # pass 2: costs
+    for name, result_type, op, operands, tail in parsed:
+        full_tail = operands + " " + tail
+        if op == "while":
+            mb = re.search(r"body=\{?%?([\w.\-]+)", full_tail)
+            mcond = re.search(r"condition=\{?%?([\w.\-]+)", full_tail)
+            if mb and mcond:
+                c.calls.append((f"{mcond.group(1)}|{mb.group(1)}", "while"))
+        else:
+            for callee in _RE_CALLS.findall(full_tail):
+                c.calls.append((callee, "call"))
+        if op in _SKIP:
+            continue
+        res_b, res_e = _shape_list_bytes_elems(result_type)
+        ops = operand_names(operands)
+        opnd_b = sum(sym[n][0] for n in ops)
+        opnd_e = sum(sym[n][1] for n in ops)
+        c.bytes_naive += res_b + opnd_b
+
+        is_coll = None
+        for k in _COLLECTIVES:
+            if op == k or op == k + "-start":
+                is_coll = k
+                break
+        if is_coll:
+            nbytes = opnd_b if is_coll == "reduce-scatter" else res_b
+            c.coll[is_coll] += nbytes
+            c.coll_count[is_coll] += 1
+            c.bytes_fused += nbytes
+            continue
+        if op == "dot":
+            k_contract = 1
+            mct = _RE_CONTRACT.search(full_tail)
+            if mct and ops:
+                lhs_dims = sym[ops[0]][2]
+                if mct.group(1):
+                    for idx in mct.group(1).split(","):
+                        i = int(idx)
+                        if i < len(lhs_dims):
+                            k_contract *= lhs_dims[i]
+            c.flops += 2.0 * res_e * k_contract
+            c.bytes_fused += res_b + opnd_b
+        elif op == "convolution":
+            c.flops += 2.0 * res_e * max(opnd_e // max(res_e, 1), 1)
+            c.bytes_fused += res_b + opnd_b
+        elif op in _ELEMENTWISE:
+            c.flops += res_e
+        elif op in ("reduce", "reduce-window"):
+            c.flops += opnd_e
+            c.bytes_fused += res_b + opnd_b
+        elif op in ("gather", "dynamic-slice", "slice", "broadcast", "iota",
+                    "pad", "reverse"):
+            # these READ only what they produce (dynamic-slice of a 2 GB
+            # scan input reads one slice, not 2 GB) — charging full operands
+            # inflated loop-heavy cells ~200x (see EXPERIMENTS.md §Dry-run)
+            c.bytes_fused += res_b
+        elif op == "dynamic-update-slice":
+            # read-modify-write of the update region only (result aliases)
+            upd = sym[ops[1]][0] if len(ops) > 1 else res_b
+            c.bytes_fused += 2 * upd
+        elif op == "scatter":
+            upd = sym[ops[-1]][0] if ops else res_b
+            c.bytes_fused += 2 * upd
+        elif op in _MATERIALIZING:
+            c.bytes_fused += res_b + opnd_b
+        elif op in ("while", "call", "fusion", "conditional"):
+            pass  # handled via call graph
+        else:
+            # unknown op: count result bytes conservatively
+            c.bytes_fused += res_b
+    return c
+
+
+def analyze(hlo_text: str, entry: Optional[str] = None) -> HloCost:
+    comps = _parse_computations(hlo_text)
+    raw = {name: _cost_of_computation(lines)
+           for name, lines in comps.items()}
+
+    # entry = computation that nothing calls (or named ENTRY in text)
+    called = {callee for c in raw.values() for callee, _ in c.calls}
+    entries = [n for n in raw if n not in called]
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+        entry = m.group(1) if m and m.group(1) in raw else (
+            entries[0] if entries else next(iter(raw)))
+
+    memo: Dict[str, CompCost] = {}
+    loops: List[Tuple[str, int]] = []
+    visiting = set()
+
+    def total(name: str) -> CompCost:
+        if name in memo:
+            return memo[name]
+        if name in visiting or name not in raw:
+            return CompCost()
+        visiting.add(name)
+        own = raw[name]
+        agg = CompCost()
+        agg.add(own)
+        for callee, kind in own.calls:
+            if kind == "while":
+                cond_name, body_name = callee.split("|", 1)
+                # trip count: the loop bound is a scalar constant in the
+                # condition computation (jax scans lower to `lt(i, N)`).
+                trip = max(raw.get(cond_name, CompCost()).max_int_const, 1)
+                agg.add(total(body_name), mult=trip)
+                agg.add(total(cond_name), mult=trip)
+                loops.append((body_name, trip))
+            else:
+                agg.add(total(callee))
+        visiting.discard(name)
+        memo[name] = agg
+        return agg
+
+    t = total(entry)
+    return HloCost(flops=t.flops, bytes_naive=t.bytes_naive,
+                   bytes_fused=t.bytes_fused, coll_bytes=t.coll,
+                   coll_count=t.coll_count, loops=loops)

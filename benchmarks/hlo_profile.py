@@ -1,0 +1,79 @@
+"""Per-computation contribution profile from a saved dry-run HLO.
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.hlo_profile \
+      experiments/dryrun/pod16x16/qwen3-4b__decode_32k.hlo.gz [--top 12]
+
+Prints each computation's trip-multiplied contribution to flops / fused bytes
+/ collective bytes — the "profile" the §Perf hypothesis loop reads (no
+wall-clock on CPU; the lowered IR is the profiler).
+"""
+
+from __future__ import annotations
+
+import argparse
+import gzip
+from typing import Dict
+
+from . import hlo_cost as HC
+
+
+def profile(text: str):
+    comps = HC._parse_computations(text)
+    raw = {n: HC._cost_of_computation(l) for n, l in comps.items()}
+    import re
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+    entry = m.group(1)
+
+    # accumulate own-cost × multiplier per computation, walking the graph
+    contrib: Dict[str, Dict[str, float]] = {}
+    seen_mult: Dict[str, float] = {}
+
+    def walk(name: str, mult: float):
+        own = raw.get(name)
+        if own is None:
+            return
+        c = contrib.setdefault(name, {"mult": 0.0, "flops": 0.0,
+                                      "bytes": 0.0, "coll": 0.0})
+        c["mult"] = max(c["mult"], mult)
+        c["flops"] += own.flops * mult
+        c["bytes"] += own.bytes_fused * mult
+        c["coll"] += sum(own.coll.values()) * mult
+        for callee, kind in own.calls:
+            if kind == "while":
+                cond, body = callee.split("|", 1)
+                trip = max(raw.get(cond, HC.CompCost()).max_int_const, 1)
+                walk(body, mult * trip)
+                walk(cond, mult * trip)
+            else:
+                walk(callee, mult)
+
+    walk(entry, 1.0)
+    return contrib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--top", type=int, default=12)
+    ap.add_argument("--by", default="bytes",
+                    choices=["bytes", "flops", "coll"])
+    args = ap.parse_args()
+    opener = gzip.open if args.path.endswith(".gz") else open
+    with opener(args.path, "rt") as f:
+        text = f.read()
+    contrib = profile(text)
+    rows = sorted(contrib.items(), key=lambda kv: -kv[1][args.by])
+    tot = {k: sum(c[k] for c in contrib.values())
+           for k in ("flops", "bytes", "coll")}
+    print(f"{'computation':58s} {'mult':>6s} {'GF':>10s} {'GB':>10s} "
+          f"{'collGB':>9s}")
+    for name, c in rows[: args.top]:
+        print(f"{name[:58]:58s} {c['mult']:6.0f} {c['flops'] / 1e9:10.1f} "
+              f"{c['bytes'] / 1e9:10.2f} {c['coll'] / 1e9:9.2f}")
+    print(f"{'TOTAL':58s} {'':6s} {tot['flops'] / 1e9:10.1f} "
+          f"{tot['bytes'] / 1e9:10.2f} {tot['coll'] / 1e9:9.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Assemble the dry-run JSON records into the EXPERIMENTS.md roofline table.
+
+Usage:  PYTHONPATH=src:. python -m benchmarks.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+
+def load_records(root: str, mesh_tag: str) -> List[Dict]:
+    out = []
+    d = os.path.join(root, mesh_tag)
+    if not os.path.isdir(d):
+        return out
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def fmt_row(r: Dict) -> str:
+    if r.get("skipped"):
+        return f"| {r['cell']} | — | — | — | — | skip | — | — |"
+    if not r.get("ok"):
+        return f"| {r['cell']} | FAIL | | | | | | |"
+    rl = r["roofline"]
+    mfu = rl.get("roofline_mfu")
+    ratio = rl.get("useful_flops_ratio")
+    return ("| {cell} | {tc:.4f} | {tm:.4f} | {tl:.4f} | {bn} | {step:.4f} "
+            "| {ratio} | {mfu} |").format(
+        cell=r["cell"], tc=rl["t_compute_s"], tm=rl["t_memory_s"],
+        tl=rl["t_collective_s"], bn=rl["bottleneck"],
+        step=rl["roofline_step_s"],
+        ratio=f"{ratio:.3f}" if ratio else "—",
+        mfu=f"{mfu:.4f}" if mfu else "—")
+
+
+HEADER = ("| cell | compute s | memory s | collective s | bottleneck | "
+          "roofline step s | useful-FLOPs ratio | roofline MFU |\n"
+          "|---|---|---|---|---|---|---|---|")
+
+
+def table(records: List[Dict]) -> str:
+    return "\n".join([HEADER] + [fmt_row(r) for r in records])
+
+
+def summary(records: List[Dict]) -> Dict:
+    ok = [r for r in records if r.get("ok") and not r.get("skipped")]
+    bns = {}
+    for r in ok:
+        bn = r["roofline"]["bottleneck"]
+        bns[bn] = bns.get(bn, 0) + 1
+    worst = sorted(
+        (r for r in ok if r["roofline"].get("roofline_mfu")),
+        key=lambda r: r["roofline"]["roofline_mfu"])
+    most_coll = sorted(
+        ok, key=lambda r: -r["roofline"]["t_collective_s"] /
+        max(r["roofline"]["roofline_step_s"], 1e-12))
+    return {
+        "cells_ok": len(ok),
+        "bottlenecks": bns,
+        "worst_mfu": [(r["cell"], r["roofline"]["roofline_mfu"])
+                      for r in worst[:5]],
+        "most_collective_bound": [
+            (r["cell"], round(r["roofline"]["t_collective_s"]
+                              / max(r["roofline"]["roofline_step_s"],
+                                    1e-12), 3))
+            for r in most_coll[:5]],
+        "compile_s_max": max((r.get("compile_s", 0) for r in ok),
+                             default=0),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    for tag in ("pod16x16", "pod2x16x16"):
+        recs = load_records(args.dir, tag)
+        if not recs:
+            continue
+        print(f"\n## {tag} ({len(recs)} cells)\n")
+        print(table(recs))
+        print("\n", json.dumps(summary(recs), indent=1))
+
+
+if __name__ == "__main__":
+    main()

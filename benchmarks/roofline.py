@@ -1,0 +1,170 @@
+"""Roofline model + HLO collective-bytes parser (EXPERIMENTS.md §Roofline).
+
+Hardware constants (assignment): TPU v5e-class chip —
+  197 TFLOP/s bf16 peak, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (per device; SPMD means per-device == global/chips):
+  compute    = flops / PEAK_FLOPS
+  memory     = hbm_bytes / HBM_BW
+  collective = collective_bytes / LINK_BW
+
+``flops`` / ``hbm_bytes`` come from ``compiled.cost_analysis()`` (per-device
+post-SPMD program).  ``collective_bytes`` is parsed from the post-SPMD HLO
+text: per op we count the bytes a device moves —
+  all-reduce / all-to-all / collective-permute: result bytes
+  all-gather: result bytes (each device receives the gathered result)
+  reduce-scatter: operand bytes (each device sends its full operand)
+Async pairs (``-start``/``-done``) are counted once, at the start op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+DCN_BW = 25e9              # bytes/s per host for cross-pod (pod axis) traffic
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+# result shape at line head:  %name = f32[1,2,3]{...} op-name(...)
+_RE_LINE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+([a-z0-9-]+)\(")
+# operand shapes inside parens: f32[8,128]
+_RE_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}:{self.count_by_kind[k]}x{self.bytes_by_kind[k]/1e6:.1f}MB"
+                 for k in sorted(self.bytes_by_kind) if self.count_by_kind[k]]
+        return " ".join(parts) or "none"
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_by_kind = {k: 0 for k in _COLLECTIVE_KINDS}
+    count_by_kind = {k: 0 for k in _COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        m = _RE_LINE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.groups()
+        kind = None
+        for k in _COLLECTIVE_KINDS:
+            if op == k or op == k + "-start":
+                kind = k
+                break
+        if kind is None:
+            continue
+        if kind == "reduce-scatter":
+            # operand bytes: first shape inside the call parens
+            paren = line[m.end():]
+            shapes = _RE_SHAPE.findall(paren)
+            nbytes = (_shape_bytes(*shapes[0]) if shapes
+                      else _shape_bytes(dtype, dims))
+        else:
+            # result bytes; tuple results (start ops) -> parse all shapes in
+            # the tuple before the op name
+            head = line[: m.start() + 1]
+            nbytes = _shape_bytes(dtype, dims)
+            if "(" in line[: line.find(op)] and line.strip().find("= (") > 0:
+                tup = _RE_SHAPE.findall(line[: line.find(op)])
+                if tup:
+                    nbytes = max(_shape_bytes(*s) for s in tup)
+        bytes_by_kind[kind] += nbytes
+        count_by_kind[kind] += 1
+    return CollectiveStats(bytes_by_kind, count_by_kind)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    collective_bytes: float      # per device
+    model_flops: float = 0.0     # analytic useful FLOPs (global)
+    chips: int = 1
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPS (global) — remat/dispatch waste detector."""
+        if self.model_flops <= 0 or self.flops <= 0:
+            return None
+        return self.model_flops / (self.flops * self.chips)
+
+    @property
+    def mfu(self) -> Optional[float]:
+        """Model FLOPs utilisation at the roofline step time."""
+        if self.model_flops <= 0:
+            return None
+        return self.model_flops / (self.step_time * self.chips * PEAK_FLOPS)
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "t_compute_s": round(self.t_compute, 6),
+            "t_memory_s": round(self.t_memory, 6),
+            "t_collective_s": round(self.t_collective, 6),
+            "bottleneck": self.bottleneck,
+            "roofline_step_s": round(self.step_time, 6),
+            "useful_flops_ratio": (round(self.useful_flops_ratio, 4)
+                                   if self.useful_flops_ratio else None),
+            "roofline_mfu": round(self.mfu, 4) if self.mfu else None,
+        }
+
+
+def train_model_flops(n_active_params: float, tokens: float) -> float:
+    """6·N·D (the assignment's MODEL_FLOPS definition)."""
+    return 6.0 * n_active_params * tokens
+
+
+def decode_model_flops(n_active_params: float, batch: float) -> float:
+    """One token per sequence: 2·N per token forward (no backward)."""
+    return 2.0 * n_active_params * batch

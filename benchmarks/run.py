@@ -1,0 +1,42 @@
+"""Benchmark harness entry point — one section per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract, plus
+section headers.  Scales are CPU-budget-reduced (factors printed inline).
+
+  table1   — HNSW on Fashion-MNIST-like / SIFT-like (paper Table I)
+  quant    — PQ/BQ compression vs recall vs scan cost (paper §II-B-2)
+  kernels  — distance-kernel microbench + TPU roofline (paper §II-B-3)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    choices=["all", "table1", "quant", "kernels"])
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller corpora (CI budget)")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    if args.only in ("all", "table1"):
+        from . import bench_hnsw
+        scale = dict(n_fmnist=2000, n_sift=3000, n_queries=100) \
+            if args.fast else {}
+        bench_hnsw.main(**scale)
+    if args.only in ("all", "quant"):
+        from . import bench_quant
+        bench_quant.main(n=8_000 if args.fast else 20_000)
+    if args.only in ("all", "kernels"):
+        from . import bench_kernels
+        bench_kernels.main()
+    print(f"# benchmarks done in {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

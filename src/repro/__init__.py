@@ -1,0 +1,3 @@
+"""Quantixar-JAX: distributed vector data management on TPU (paper repro)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,24 @@
+"""Quantixar core: the paper's contribution as composable JAX modules."""
+
+from .distances import (available_metrics, brute_force_topk, get_metric,
+                        normalize, pairwise_cosine, pairwise_dot,
+                        pairwise_hamming, pairwise_l2)
+from .engine import EngineConfig, QuantixarEngine
+from .flat import FlatIndex, flat_search, merge_topk
+from .hnsw_build import HNSWConfig, PackedHNSW, build, bulk_build, exact_knn
+from .hnsw_search import HNSWGraph, recall_at_k, search, to_device
+from .metadata import And, Filter, MetadataStore, Not, Or, Predicate
+from .bq import BinaryQuantizer, BQConfig
+from .ivf import IVFConfig, IVFIndex
+from .pq import PQConfig, ProductQuantizer
+
+__all__ = [
+    "available_metrics", "brute_force_topk", "get_metric", "normalize",
+    "pairwise_cosine", "pairwise_dot", "pairwise_hamming", "pairwise_l2",
+    "EngineConfig", "QuantixarEngine", "FlatIndex", "flat_search",
+    "merge_topk", "HNSWConfig", "PackedHNSW", "build", "bulk_build",
+    "exact_knn", "HNSWGraph", "recall_at_k", "search", "to_device",
+    "And", "Filter", "MetadataStore", "Not", "Or", "Predicate",
+    "BinaryQuantizer", "BQConfig", "IVFConfig", "IVFIndex",
+    "PQConfig", "ProductQuantizer",
+]

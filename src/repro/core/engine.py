@@ -1,0 +1,384 @@
+"""QuantixarEngine — config-driven composition of index × quantization × metric
+(paper §III: Query Processing + Quantization + Indexing modules).
+
+Composition matrix (all user-configurable, as the paper emphasises):
+
+  index ∈ {flat, hnsw}   ×   quantization ∈ {none, pq, bq}   ×   metric
+  + optional exact-rescore pass for quantized first-pass candidates
+  + MEVS: predicate filter -> mask threaded into the search
+
+Quantized HNSW traversal uses the *exact ADC identity*: the ADC distance of a
+PQ code equals the squared-L2 distance to its reconstruction, and packed-code
+Hamming distance is monotone in the dot product of ±1 sign vectors.  The
+device graph therefore stores the reconstruction (PQ) or sign (BQ) vectors,
+giving traversal orderings identical to code-domain arithmetic.  On a real TPU
+deployment the same traversal gathers codes and evaluates the Pallas ADC /
+Hamming kernels (see kernels/); numerics are the same by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import bq as bq_mod
+from . import pq as pq_mod
+from .distances import get_metric
+from .flat import flat_search
+from .hnsw_build import HNSWConfig, PackedHNSW, build, bulk_build, preprocess_vectors
+from .ivf import IVFConfig, IVFIndex
+from .hnsw_search import to_device, search as hnsw_search
+from .metadata import Filter, MetadataStore
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    dim: int
+    metric: str = "cosine"               # default per paper §I
+    index: str = "hnsw"                  # "hnsw" | "flat" | "ivf"
+    quantization: str = "none"           # "none" | "pq" | "bq"
+    pq: pq_mod.PQConfig = dataclasses.field(default_factory=pq_mod.PQConfig)
+    bq: bq_mod.BQConfig = dataclasses.field(default_factory=bq_mod.BQConfig)
+    hnsw: HNSWConfig = dataclasses.field(default_factory=HNSWConfig)
+    ivf: IVFConfig = dataclasses.field(default_factory=IVFConfig)
+    builder: str = "incremental"         # "incremental" (faithful) | "bulk"
+    ef_search: int = 64
+    rescore: bool = True                 # exact second pass for quantized search
+    rescore_multiplier: int = 4          # first pass fetches k * multiplier
+    filter_flat_threshold: float = 0.10  # MEVS: selectivity below which we
+    #                                      scan the filtered subset exactly
+
+    def __post_init__(self):
+        if self.index not in ("hnsw", "flat", "ivf"):
+            raise ValueError(f"index {self.index!r}")
+        self.ivf = dataclasses.replace(self.ivf, metric=(
+            "cosine" if self.metric == "cosine" else "l2"))
+        if self.quantization not in ("none", "pq", "bq"):
+            raise ValueError(f"quantization {self.quantization!r}")
+        # HNSW metric follows the engine metric
+        self.hnsw = dataclasses.replace(self.hnsw, metric=self.metric)
+
+
+class QuantixarEngine:
+    """The paper's "Quantixar Engine": entities in, similarity queries out."""
+
+    def __init__(self, config: EngineConfig):
+        self.config = config
+        self._vectors: List[np.ndarray] = []      # raw entity vectors (chunks)
+        self._n = 0
+        self.metadata = MetadataStore()
+        self._pq: Optional[pq_mod.ProductQuantizer] = None
+        self._bq: Optional[bq_mod.BinaryQuantizer] = None
+        self._codes: Optional[np.ndarray] = None   # pq codes or bq packed words
+        self._packed: Optional[PackedHNSW] = None
+        self._device_graph = None                  # (HNSWGraph, max_level, metric)
+        self._ivf: Optional[IVFIndex] = None
+        self._dirty = True
+        self.build_seconds: float = 0.0
+        self.insert_seconds: float = 0.0
+
+    # ------------------------------------------------------------------ data
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def vectors(self) -> np.ndarray:
+        if not self._vectors:
+            return np.zeros((0, self.config.dim), dtype=np.float32)
+        if len(self._vectors) > 1:
+            self._vectors = [np.concatenate(self._vectors, axis=0)]
+        return self._vectors[0]
+
+    def add(self, vectors: np.ndarray,
+            metadata: Optional[Sequence[Optional[Dict[str, Any]]]] = None) -> None:
+        """Insert a batch of entities (vector + optional metadata record)."""
+        t0 = time.perf_counter()
+        vectors = np.asarray(vectors, dtype=np.float32)
+        if vectors.ndim != 2 or vectors.shape[1] != self.config.dim:
+            raise ValueError(
+                f"expected (n, {self.config.dim}) vectors, got {vectors.shape}")
+        if metadata is None:
+            metadata = [None] * len(vectors)
+        if len(metadata) != len(vectors):
+            raise ValueError("metadata length mismatch")
+        self._vectors.append(vectors)
+        self._n += len(vectors)
+        self.metadata.append_batch(metadata)
+        self._dirty = True
+        self.insert_seconds += time.perf_counter() - t0
+
+    # ----------------------------------------------------------------- build
+    def build(self, seed: int = 0) -> None:
+        """Train quantizers + build the index over everything inserted so far."""
+        t0 = time.perf_counter()
+        cfg = self.config
+        raw = self.vectors
+        if len(raw) == 0:
+            raise RuntimeError("nothing to build: add() vectors first")
+
+        if cfg.quantization == "pq":
+            self._pq = pq_mod.ProductQuantizer(
+                dataclasses.replace(cfg.pq, metric=(
+                    "cosine" if cfg.metric == "cosine" else "l2")))
+            self._pq.train(jnp.asarray(raw), seed=seed)
+            self._codes = np.asarray(self._pq.encode(jnp.asarray(raw)))
+        elif cfg.quantization == "bq":
+            self._bq = bq_mod.BinaryQuantizer(cfg.bq)
+            self._bq.train(jnp.asarray(raw), seed=seed)
+            self._codes = np.asarray(self._bq.encode(jnp.asarray(raw)))
+        else:
+            self._codes = None
+
+        if cfg.index == "hnsw":
+            eff, eff_metric = self._effective_vectors()
+            hnsw_cfg = dataclasses.replace(cfg.hnsw, metric=eff_metric)
+            builder = bulk_build if cfg.builder == "bulk" else build
+            self._packed = builder(eff, hnsw_cfg)
+            self._device_graph = to_device(self._packed)
+        elif cfg.index == "ivf":
+            # IVF-PQ scans probed lists over reconstructions (the ADC
+            # identity, as in the quantized-HNSW path).  BQ's ±1 sign vectors
+            # live in code space (bits ≠ dim), so IVF+BQ probes and scans
+            # raw vectors — BQ then only compresses the stored codes.
+            if cfg.quantization == "pq":
+                eff, eff_metric = self._effective_vectors()
+            else:
+                eff, eff_metric = raw, cfg.metric
+            self._ivf = IVFIndex(dataclasses.replace(
+                cfg.ivf, metric="l2" if eff_metric != "cosine" else "cosine"))
+            self._ivf.train(jnp.asarray(raw), seed=seed)
+            self._ivf.build_lists(jnp.asarray(raw))
+            self._ivf_effective = eff
+        else:
+            self._packed = None
+            self._device_graph = None
+        self._dirty = False
+        self.build_seconds = time.perf_counter() - t0
+
+    def _effective_vectors(self) -> Tuple[np.ndarray, str]:
+        """Vectors the graph traverses + the traversal metric (see module doc)."""
+        cfg = self.config
+        raw = self.vectors
+        if cfg.quantization == "pq":
+            recon = np.asarray(self._pq.decode(jnp.asarray(self._codes)))
+            # ADC == L2-to-reconstruction (exact identity); cosine inputs were
+            # normalized inside the quantizer already.
+            return recon, "l2"
+        if cfg.quantization == "bq":
+            signs = np.asarray(bq_mod.unpack_bits(
+                jnp.asarray(self._codes), cfg.bq.bits), dtype=np.float32)
+            return signs * 2.0 - 1.0, "dot"   # hamming ~ -dot of ±1 vectors
+        return raw, cfg.metric
+
+    # ---------------------------------------------------------------- search
+    def search(self, queries: np.ndarray, k: int,
+               flt: Optional[Filter] = None,
+               ef: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k similarity search (Vector Query / MEVS).
+
+        Returns (distances (Q,k) in the engine metric, ids (Q,k); -1 = none).
+        """
+        if self._dirty:
+            self.build()
+        cfg = self.config
+        queries = np.asarray(queries, dtype=np.float32)
+        if queries.ndim == 1:
+            queries = queries[None, :]
+        ef = ef or max(cfg.ef_search, k)
+        mask = self.metadata.evaluate(flt) if flt is not None else None
+
+        fetch = k * cfg.rescore_multiplier if (
+            cfg.rescore and cfg.quantization != "none") else k
+
+        if cfg.index == "flat" or self._route_to_flat(mask):
+            d, ids = self._flat_pass(queries, fetch, mask)
+        elif cfg.index == "ivf":
+            d, ids = self._ivf_pass(queries, fetch, mask)
+        else:
+            d, ids = self._hnsw_pass(queries, fetch, ef, mask)
+
+        if cfg.rescore and cfg.quantization != "none":
+            d, ids = self._rescore(queries, ids, k)
+        else:
+            d, ids = d[:, :k], ids[:, :k]
+        return d, ids
+
+    def _route_to_flat(self, mask: Optional[np.ndarray]) -> bool:
+        """MEVS routing (paper: filter first, then search the subset): at low
+        selectivity an exact masked scan is both faster and exact."""
+        if mask is None:
+            return False
+        sel = mask.mean() if len(mask) else 0.0
+        return sel <= self.config.filter_flat_threshold
+
+    def _flat_pass(self, queries, k, mask):
+        cfg = self.config
+        mask_j = None if mask is None else jnp.asarray(mask)
+        if cfg.quantization == "pq":
+            lut = pq_mod.build_adc_lut(
+                jnp.asarray(queries), self._pq.codebooks,
+                normalize_inputs=cfg.metric == "cosine")
+            d = pq_mod.adc_distances(lut, jnp.asarray(self._codes))
+            if mask_j is not None:
+                d = jnp.where(mask_j[None, :], d, jnp.inf)
+            neg_d, ids = jnp.array(-d), None
+            import jax
+            neg_top, idx = jax.lax.top_k(neg_d, min(k, d.shape[1]))
+            return np.asarray(-neg_top), np.asarray(idx, dtype=np.int32)
+        if cfg.quantization == "bq":
+            q_codes = self._bq.encode(jnp.asarray(queries))
+            d = bq_mod.hamming_distances(q_codes, jnp.asarray(self._codes))
+            d = d.astype(jnp.float32)
+            if mask_j is not None:
+                d = jnp.where(mask_j[None, :], d, jnp.inf)
+            import jax
+            neg_top, idx = jax.lax.top_k(-d, min(k, d.shape[1]))
+            return np.asarray(-neg_top), np.asarray(idx, dtype=np.int32)
+        d, ids = flat_search(jnp.asarray(queries), jnp.asarray(self.vectors),
+                             min(k, self._n), metric=cfg.metric, mask=mask_j)
+        return np.asarray(d), np.asarray(ids)
+
+    def _hnsw_pass(self, queries, k, ef, mask):
+        cfg = self.config
+        g, max_level, metric = self._device_graph
+        ef_eff = max(ef, k)
+        if mask is not None:
+            ef_eff = min(max(ef_eff * 2, k * 4), self._n)
+        q = queries
+        if metric == "dot" and cfg.quantization == "none":
+            q = preprocess_vectors(queries, cfg.metric)
+        elif cfg.quantization == "bq":
+            signs = np.asarray(bq_mod.unpack_bits(
+                self._bq.encode(jnp.asarray(queries)), cfg.bq.bits),
+                dtype=np.float32)
+            q = signs * 2.0 - 1.0
+        elif cfg.quantization == "pq" and cfg.metric == "cosine":
+            q = preprocess_vectors(queries, "cosine")
+        d, ids = hnsw_search(g, jnp.asarray(q), k=min(ef_eff, self._n),
+                             ef=min(ef_eff, self._n), max_level=max_level,
+                             metric=metric)
+        d, ids = np.asarray(d), np.asarray(ids)
+        if mask is not None:
+            allowed = np.concatenate([mask, [False]])  # -1 -> False
+            ok = allowed[ids]
+            d = np.where(ok, d, np.inf)
+            order = np.argsort(d, axis=1, kind="stable")
+            d = np.take_along_axis(d, order, axis=1)
+            ids = np.where(np.take_along_axis(ok, order, axis=1),
+                           np.take_along_axis(ids, order, axis=1), -1)
+            # top-up from exact masked scan if the beam under-delivered
+            if (ids[:, :k] == -1).any():
+                return self._flat_pass(queries, k, mask)
+        return d[:, :k], ids[:, :k]
+
+    def _ivf_pass(self, queries, k, mask):
+        d, ids = self._ivf.search(jnp.asarray(self._ivf_effective),
+                                  jnp.asarray(queries), k)
+        d, ids = np.asarray(d), np.asarray(ids)
+        if mask is not None:
+            allowed = np.concatenate([mask, [False]])
+            ok = allowed[ids]
+            d = np.where(ok, d, np.inf)
+            order = np.argsort(d, axis=1, kind="stable")
+            d = np.take_along_axis(d, order, axis=1)
+            ids = np.where(np.take_along_axis(ok, order, axis=1),
+                           np.take_along_axis(ids, order, axis=1), -1)
+            if (ids[:, : min(k, ids.shape[1])] == -1).any():
+                return self._flat_pass(queries, k, mask)
+        return d[:, :k], ids[:, :k]
+
+    def _rescore(self, queries, cand_ids, k):
+        """Exact re-ranking of quantized first-pass candidates (paper's
+        optional precision knob)."""
+        pair = get_metric(self.config.metric)
+        raw = self.vectors
+        safe = np.maximum(cand_ids, 0)
+        cand_vecs = raw[safe]                      # (Q, k', D)
+        d = np.stack([
+            np.asarray(pair(jnp.asarray(queries[i: i + 1]),
+                            jnp.asarray(cand_vecs[i])))[0]
+            for i in range(len(queries))])
+        d = np.where(cand_ids >= 0, d, np.inf)
+        order = np.argsort(d, axis=1, kind="stable")[:, :k]
+        return (np.take_along_axis(d, order, axis=1),
+                np.take_along_axis(cand_ids, order, axis=1))
+
+    # ----------------------------------------------------------- persistence
+    def state_dict(self) -> Dict[str, Any]:
+        state: Dict[str, Any] = {
+            "vectors": self.vectors,
+            "n": np.array([self._n], dtype=np.int64),
+        }
+        if self._codes is not None:
+            state["codes"] = self._codes
+        if self._pq is not None:
+            state.update({f"pq.{k}": v for k, v in self._pq.state_dict().items()})
+        if self._bq is not None:
+            state.update({f"bq.{k}": v for k, v in self._bq.state_dict().items()})
+        if self._packed is not None:
+            state.update({f"hnsw.{k}": v
+                          for k, v in self._packed.state_dict().items()})
+        if self._ivf is not None:
+            state.update({f"ivf.{k}": v
+                          for k, v in self._ivf.state_dict().items()})
+        state.update({f"meta.{k}": v
+                      for k, v in self.metadata.state_dict().items()})
+        return state
+
+    @classmethod
+    def from_state_dict(cls, config: EngineConfig,
+                        state: Dict[str, Any]) -> "QuantixarEngine":
+        eng = cls(config)
+        eng._vectors = [np.asarray(state["vectors"], dtype=np.float32)]
+        eng._n = int(state["n"][0])
+        eng.metadata = MetadataStore.from_state_dict(
+            {k[5:]: v for k, v in state.items() if k.startswith("meta.")})
+        if "codes" in state:
+            eng._codes = np.asarray(state["codes"])
+        pq_state = {k[3:]: v for k, v in state.items() if k.startswith("pq.")}
+        if pq_state:
+            eng._pq = pq_mod.ProductQuantizer(dataclasses.replace(
+                config.pq, metric="cosine" if config.metric == "cosine" else "l2"))
+            eng._pq.load_state_dict(pq_state)
+        bq_state = {k[3:]: v for k, v in state.items() if k.startswith("bq.")}
+        if bq_state:
+            eng._bq = bq_mod.BinaryQuantizer(config.bq)
+            eng._bq.load_state_dict(bq_state)
+        ivf_state = {k[4:]: v for k, v in state.items()
+                     if k.startswith("ivf.")}
+        if ivf_state:
+            eng._ivf = IVFIndex(config.ivf)
+            eng._ivf.load_state_dict(ivf_state)
+            eng._ivf_effective, _ = eng._effective_vectors()
+            eng._dirty = False
+        hnsw_state = {k[5:]: v for k, v in state.items()
+                      if k.startswith("hnsw.")}
+        if hnsw_state:
+            eff_metric = ("l2" if config.quantization == "pq" else
+                          "dot" if config.quantization == "bq" else config.metric)
+            eng._packed = PackedHNSW.from_state_dict(
+                hnsw_state, dataclasses.replace(config.hnsw, metric=eff_metric))
+            eng._device_graph = to_device(eng._packed)
+            eng._dirty = False
+        elif config.index == "flat" and eng._n:
+            eng._dirty = False
+        return eng
+
+    def stats(self) -> Dict[str, Any]:
+        out = {"n": self._n, "dim": self.config.dim,
+               "index": self.config.index,
+               "quantization": self.config.quantization,
+               "metric": self.config.metric,
+               "build_seconds": self.build_seconds,
+               "insert_seconds": self.insert_seconds}
+        if self._packed is not None:
+            out.update(self._packed.degree_stats())
+        if self._pq is not None:
+            out["compression"] = self._pq.compression_ratio(self.config.dim)
+        if self._bq is not None:
+            out["compression"] = self._bq.compression_ratio(self.config.dim)
+        return out

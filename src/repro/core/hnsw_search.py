@@ -1,0 +1,258 @@
+"""Jittable HNSW search — the TPU-native adaptation (DESIGN.md §2).
+
+The CPU algorithm's dynamic structures are re-expressed as fixed-shape tensor
+ops so the whole search jits, vmaps over query batches, and shards:
+
+  greedy upper-layer descent   -> ``lax.while_loop`` over a gathered (M,)
+                                  neighbour row + masked argmin
+  candidate min-heap / results -> one fused (ef,) candidate buffer maintained
+                                  by ``lax.top_k`` over (ef + M0) merged rows
+  visited hash-set             -> packed bitmask, ``ceil(N/32)`` uint32 words,
+                                  updated with a scatter-add of unique bits
+  per-neighbour distance calls -> one (M0, D) gather + one matvec per
+                                  expansion (MXU/VPU work, not scalar chasing)
+
+Every expansion touches exactly one candidate, so the loop trip count is
+bounded (``max_iters``), giving XLA a fully static program.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hnsw_build import PAD, PackedHNSW
+
+Array = jax.Array
+INF = jnp.inf
+
+
+class HNSWGraph(NamedTuple):
+    """Device-resident packed graph (all jnp arrays; static meta travels
+    separately as jit-static args)."""
+
+    vectors: Array      # (N, D) float32, metric-preprocessed
+    adj0: Array         # (N, M0) int32, PAD = -1
+    upper_ids: Array    # (U,) int32 upper-slot -> global id
+    upper_adj: Array    # (U, L_top, M) int32 upper-slot ids, PAD = -1
+    entry_global: Array  # () int32
+    entry_upper: Array   # () int32
+
+
+def to_device(packed: PackedHNSW) -> Tuple[HNSWGraph, int, str]:
+    """Returns (graph arrays, static max_level, static metric)."""
+    g = HNSWGraph(
+        vectors=jnp.asarray(packed.vectors, dtype=jnp.float32),
+        adj0=jnp.asarray(packed.adj0),
+        upper_ids=jnp.asarray(packed.upper_ids),
+        upper_adj=jnp.asarray(packed.upper_adj),
+        entry_global=jnp.asarray(packed.entry_global, dtype=jnp.int32),
+        entry_upper=jnp.asarray(packed.entry_upper, dtype=jnp.int32),
+    )
+    metric = "l2" if packed.config.metric == "l2" else "dot"
+    return g, int(packed.max_level), metric
+
+
+def _dist_rows(q: Array, rows: Array, metric: str) -> Array:
+    """q (D,) vs rows (M, D) -> (M,) raw scores (smaller == closer)."""
+    if metric == "l2":
+        d = rows - q[None, :]
+        return jnp.sum(d * d, axis=-1)
+    return -(rows @ q)  # dot / pre-normalized cosine
+
+
+def _descend(q: Array, g: HNSWGraph, layer: int, cur: Array,
+             metric: str) -> Array:
+    """Greedy move-to-nearest at one upper layer; cur is an upper-slot id."""
+
+    def cur_dist(slot):
+        return _dist_rows(q, g.vectors[g.upper_ids[slot]][None, :], metric)[0]
+
+    def cond(state):
+        _, _, moved = state
+        return moved
+
+    def body(state):
+        slot, d_cur, _ = state
+        nbrs = g.upper_adj[slot, layer]              # (M,) upper-slot ids
+        valid = nbrs != PAD
+        safe = jnp.maximum(nbrs, 0)
+        rows = g.vectors[g.upper_ids[safe]]          # (M, D) gather
+        d = jnp.where(valid, _dist_rows(q, rows, metric), INF)
+        j = jnp.argmin(d)
+        better = d[j] < d_cur
+        return (jnp.where(better, nbrs[j], slot),
+                jnp.where(better, d[j], d_cur), better)
+
+    slot, _, _ = jax.lax.while_loop(
+        cond, body, (cur, cur_dist(cur), jnp.array(True)))
+    return slot
+
+
+def _beam_search_base(q: Array, g: HNSWGraph, ep_global: Array, ef: int,
+                      max_iters: int, metric: str,
+                      n_words: int) -> Tuple[Array, Array]:
+    """Fixed-ef beam search on layer 0. Returns (dists (ef,), ids (ef,))."""
+    m0 = g.adj0.shape[1]
+
+    # init: buffer holds just the entry point
+    cand_d = jnp.full((ef,), INF).at[0].set(
+        _dist_rows(q, g.vectors[ep_global][None, :], metric)[0])
+    cand_id = jnp.full((ef,), -1, dtype=jnp.int32).at[0].set(ep_global)
+    expanded = jnp.zeros((ef,), dtype=bool)
+    visited = jnp.zeros((n_words,), dtype=jnp.uint32).at[ep_global // 32].set(
+        jnp.uint32(1) << (ep_global % 32).astype(jnp.uint32))
+
+    def cond(state):
+        cand_d, _, expanded, _, it = state
+        frontier = jnp.any(~expanded & jnp.isfinite(cand_d))
+        return frontier & (it < max_iters)
+
+    def body(state):
+        cand_d, cand_id, expanded, visited, it = state
+        # pop nearest unexpanded candidate
+        masked = jnp.where(~expanded, cand_d, INF)
+        c = jnp.argmin(masked)
+        expanded = expanded.at[c].set(True)
+        node = cand_id[c]
+
+        nbrs = g.adj0[node]                         # (M0,) global ids
+        valid = nbrs != PAD
+        safe = jnp.maximum(nbrs, 0)
+        word = safe // 32
+        bit = (safe % 32).astype(jnp.uint32)
+        seen = (visited[word] >> bit) & jnp.uint32(1)
+        fresh = valid & (seen == 0)
+        # scatter-OR: bits are unique per (word,bit) among fresh neighbours
+        # (adjacency rows are duplicate-free — graph invariant, tested) and
+        # previously 0 (fresh-mask), so add == or.
+        add_val = jnp.where(fresh, jnp.uint32(1) << bit, jnp.uint32(0))
+        visited = visited.at[word].add(add_val)
+
+        rows = g.vectors[safe]                      # (M0, D)
+        d = jnp.where(fresh, _dist_rows(q, rows, metric), INF)
+        new_id = jnp.where(fresh, nbrs, -1)
+
+        merged_d = jnp.concatenate([cand_d, d])
+        merged_id = jnp.concatenate([cand_id, new_id])
+        merged_exp = jnp.concatenate([expanded, ~fresh])  # stale -> never expand
+
+        neg_top, sel = jax.lax.top_k(-merged_d, ef)
+        return (-neg_top, merged_id[sel], merged_exp[sel], visited, it + 1)
+
+    state = (cand_d, cand_id, expanded, visited, jnp.array(0, jnp.int32))
+    cand_d, cand_id, _, _, _ = jax.lax.while_loop(cond, body, state)
+    return cand_d, cand_id
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "ef", "max_iters", "max_level", "metric"))
+def search(g: HNSWGraph, queries: Array, *, k: int, ef: int,
+           max_level: int, metric: str = "dot",
+           max_iters: Optional[int] = None) -> Tuple[Array, Array]:
+    """Batched HNSW search.
+
+    Args:
+      g: device graph from :func:`to_device`.
+      queries: (Q, D) — pre-normalize for cosine (to_device stores the corpus
+        normalized; use metric="dot").
+      k: neighbours to return (k <= ef).
+      ef: beam width.
+      max_level: static top layer of the graph.
+      metric: "dot" | "l2" (cosine == dot on normalized inputs).
+      max_iters: expansion budget; default 4*ef.
+
+    Returns:
+      (distances (Q, k) ascending raw scores, ids (Q, k) int32; -1 = unfilled).
+    """
+    if max_iters is None:
+        max_iters = 4 * ef
+    if k > ef:
+        raise ValueError(f"k={k} > ef={ef}")
+    n = g.vectors.shape[0]
+    n_words = (n + 31) // 32
+    queries = queries.astype(jnp.float32)
+
+    def one(q):
+        slot = g.entry_upper
+        for layer in range(max_level, 0, -1):       # static unroll, tiny
+            slot = _descend(q, g, layer - 1, slot, metric)
+        ep = jnp.where(jnp.asarray(max_level > 0),
+                       g.upper_ids[slot], g.entry_global)
+        d, ids = _beam_search_base(q, g, ep, ef, max_iters, metric, n_words)
+        return d[:k], ids[:k]
+
+    return jax.vmap(one)(queries)
+
+
+def search_numpy_reference(packed: PackedHNSW, queries: np.ndarray, k: int,
+                           ef: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Host oracle mirroring the fixed-shape device algorithm (test parity)."""
+    from .hnsw_build import make_dist_fn, preprocess_vectors
+
+    metric = packed.config.metric
+    vecs = packed.vectors
+    dist = make_dist_fn(vecs, metric)
+    q_all = preprocess_vectors(queries, metric)
+    out_d = np.full((len(q_all), k), np.inf, dtype=np.float32)
+    out_i = np.full((len(q_all), k), -1, dtype=np.int32)
+
+    for qi, q in enumerate(q_all):
+        # descent
+        slot = packed.entry_upper
+        for layer in range(packed.max_level, 0, -1):
+            while True:
+                nbrs = packed.upper_adj[slot, layer - 1]
+                nbrs = nbrs[nbrs != PAD]
+                if len(nbrs) == 0:
+                    break
+                d_cur = dist(q, np.array([packed.upper_ids[slot]], np.int64))[0]
+                ds = dist(q, packed.upper_ids[nbrs].astype(np.int64))
+                j = int(np.argmin(ds))
+                if ds[j] < d_cur:
+                    slot = int(nbrs[j])
+                else:
+                    break
+        ep = int(packed.upper_ids[slot]) if packed.max_level > 0 \
+            else packed.entry_global
+        # beam
+        cand_d = np.full((ef,), np.inf, np.float32)
+        cand_i = np.full((ef,), -1, np.int64)
+        expanded = np.zeros((ef,), bool)
+        cand_d[0] = dist(q, np.array([ep], np.int64))[0]
+        cand_i[0] = ep
+        visited = {ep}
+        for _ in range(4 * ef):
+            masked = np.where(~expanded, cand_d, np.inf)
+            c = int(np.argmin(masked))
+            if not np.isfinite(masked[c]):
+                break
+            expanded[c] = True
+            nbrs = packed.adj0[cand_i[c]]
+            nbrs = [int(e) for e in nbrs if e != PAD and e not in visited]
+            if not nbrs:
+                continue
+            visited.update(nbrs)
+            ds = dist(q, np.asarray(nbrs, np.int64))
+            md = np.concatenate([cand_d, ds])
+            mi = np.concatenate([cand_i, nbrs])
+            me = np.concatenate([expanded, np.zeros(len(nbrs), bool)])
+            sel = np.argsort(md, kind="stable")[:ef]
+            cand_d, cand_i, expanded = md[sel], mi[sel], me[sel]
+        out_d[qi] = cand_d[:k]
+        out_i[qi] = cand_i[:k]
+    return out_d, out_i
+
+
+def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    """Mean fraction of true k-NN recovered (ann-benchmarks style)."""
+    hits = 0
+    k = true_ids.shape[1]
+    for f, t in zip(found_ids, true_ids):
+        hits += len(set(int(x) for x in f[:k]) & set(int(x) for x in t))
+    return hits / (len(true_ids) * k)

@@ -1,0 +1,215 @@
+"""Product Quantization (paper §II-B-2).
+
+Faithful to the paper's formulation:
+
+  1) Partition x ∈ R^d into m sub-vectors x = [x^(1) … x^(m)], each in R^{d/m}.
+  2) Learn a k-centroid codebook C^(i) per sub-space (Lloyd's k-means).
+  3) Encode each sub-vector as its nearest centroid id (uint8 for k ≤ 256).
+  4) Search with Asymmetric Distance Computation (ADC): a (m, k) lookup table
+     of query-subvector→centroid distances is built once per query; the
+     distance to a database code is the sum of m table lookups — no float
+     arithmetic against the corpus at all.
+
+TPU adaptation: k-means is vmapped across the m sub-spaces (one batched
+program instead of m sequential fits); ADC is a gather+reduce that the Pallas
+kernel in kernels/pq_adc.py tiles through VMEM (LUT resident, codes streamed).
+
+Cosine support follows the standard construction: unit-normalize vectors
+before codebook training/encoding, then squared-L2 ADC is monotone in cosine
+distance (‖x−y‖² = 2 − 2·cosθ on the unit sphere).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .distances import normalize
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class PQConfig:
+    m: int = 16          # number of sub-vectors
+    k: int = 256         # codebook size per sub-space (uint8 codes)
+    iters: int = 25      # Lloyd iterations
+    metric: str = "l2"   # "l2" | "cosine"  (cosine == l2 on normalized inputs)
+
+    def validate(self, d: int) -> None:
+        if d % self.m != 0:
+            raise ValueError(f"d={d} not divisible by m={self.m}")
+        if self.k > 65536:
+            raise ValueError("k > 65536 unsupported")
+
+    def code_dtype(self):
+        return jnp.uint8 if self.k <= 256 else jnp.uint16
+
+
+# ---------------------------------------------------------------------------
+# k-means (single sub-space) — vmapped over sub-spaces below
+# ---------------------------------------------------------------------------
+
+def _kmeans_plus_plus_ish_init(key: Array, x: Array, k: int) -> Array:
+    """Cheap seeding: random distinct samples (k-means‖ is overkill at d/m dims)."""
+    n = x.shape[0]
+    idx = jax.random.choice(key, n, shape=(k,), replace=n < k)
+    return x[idx]
+
+
+def _lloyd_step(x: Array, centroids: Array) -> Tuple[Array, Array]:
+    """One Lloyd iteration. x: (n, s), centroids: (k, s) -> (new_centroids, assign)."""
+    # pairwise squared L2 via GEMM
+    xx = jnp.sum(x * x, axis=1)
+    cc = jnp.sum(centroids * centroids, axis=1)
+    d = xx[:, None] + cc[None, :] - 2.0 * (x @ centroids.T)
+    assign = jnp.argmin(d, axis=1)
+    k = centroids.shape[0]
+    one_hot = jax.nn.one_hot(assign, k, dtype=x.dtype)  # (n, k)
+    counts = one_hot.sum(0)  # (k,)
+    sums = one_hot.T @ x  # (k, s)
+    new = sums / jnp.maximum(counts, 1.0)[:, None]
+    # Empty clusters keep their old centroid (standard fallback).
+    new = jnp.where(counts[:, None] > 0, new, centroids)
+    return new, assign
+
+
+def _fit_one_subspace(key: Array, x: Array, k: int, iters: int) -> Array:
+    cent = _kmeans_plus_plus_ish_init(key, x, k)
+
+    def body(_, c):
+        c2, _ = _lloyd_step(x, c)
+        return c2
+
+    return jax.lax.fori_loop(0, iters, body, cent)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "iters", "normalize_inputs"))
+def train_codebooks(key: Array, vectors: Array, m: int, k: int,
+                    iters: int = 25, normalize_inputs: bool = False) -> Array:
+    """Learn (m, k, d/m) codebooks with a vmapped batched k-means."""
+    if normalize_inputs:
+        vectors = normalize(vectors)
+    n, d = vectors.shape
+    s = d // m
+    sub = vectors.astype(jnp.float32).reshape(n, m, s).transpose(1, 0, 2)  # (m, n, s)
+    keys = jax.random.split(key, m)
+    return jax.vmap(lambda kk, xx: _fit_one_subspace(kk, xx, k, iters))(keys, sub)
+
+
+@functools.partial(jax.jit, static_argnames=("normalize_inputs",))
+def encode(vectors: Array, codebooks: Array, normalize_inputs: bool = False) -> Array:
+    """Quantize: (n, d) -> (n, m) codes (argmin centroid per sub-space)."""
+    if normalize_inputs:
+        vectors = normalize(vectors)
+    m, k, s = codebooks.shape
+    n = vectors.shape[0]
+    sub = vectors.astype(jnp.float32).reshape(n, m, s)
+
+    def per_sub(x_ms, cb):  # x_ms: (n, s), cb: (k, s)
+        d = (jnp.sum(x_ms * x_ms, 1)[:, None] + jnp.sum(cb * cb, 1)[None, :]
+             - 2.0 * x_ms @ cb.T)
+        return jnp.argmin(d, axis=1)
+
+    codes = jax.vmap(per_sub, in_axes=(1, 0), out_axes=1)(sub, codebooks)
+    dtype = jnp.uint8 if k <= 256 else jnp.uint16
+    return codes.astype(dtype)
+
+
+@jax.jit
+def decode(codes: Array, codebooks: Array) -> Array:
+    """Reconstruct (n, d) float32 vectors from (n, m) codes."""
+    m, k, s = codebooks.shape
+    # gather per sub-space: codebooks[i, codes[:, i]]  -> (n, m, s)
+    recon = jax.vmap(lambda cb, c: cb[c], in_axes=(0, 1), out_axes=1)(
+        codebooks, codes.astype(jnp.int32))
+    return recon.reshape(codes.shape[0], m * s)
+
+
+@functools.partial(jax.jit, static_argnames=("normalize_inputs",))
+def build_adc_lut(queries: Array, codebooks: Array,
+                  normalize_inputs: bool = False) -> Array:
+    """Per-query lookup tables: (Q, m, k) squared-L2 from query sub-vectors to
+    every centroid.  ADC distance(code) = sum_i LUT[q, i, code[i]]."""
+    if normalize_inputs:
+        queries = normalize(queries)
+    m, k, s = codebooks.shape
+    q = queries.astype(jnp.float32).reshape(queries.shape[0], m, s)
+
+    def per_sub(q_ms, cb):  # (Q, s), (k, s) -> (Q, k)
+        return (jnp.sum(q_ms * q_ms, 1)[:, None] + jnp.sum(cb * cb, 1)[None, :]
+                - 2.0 * q_ms @ cb.T)
+
+    return jax.vmap(per_sub, in_axes=(1, 0), out_axes=1)(q, codebooks)
+
+
+@jax.jit
+def adc_distances(lut: Array, codes: Array) -> Array:
+    """ADC scan: lut (Q, m, k) × codes (N, m) -> (Q, N) distances.
+
+    Pure-jnp formulation (oracle); the Pallas kernel pq_adc implements the
+    same contraction with the LUT pinned in VMEM.
+    """
+    c = codes.astype(jnp.int32)  # (N, m)
+
+    def per_sub(lut_i, c_i):  # lut_i (Q, k), c_i (N,) -> (Q, N)
+        return lut_i[:, c_i]
+
+    g = jax.vmap(per_sub, in_axes=(1, 1))(lut, c)  # (m, Q, N)
+    return jnp.sum(g, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def adc_topk(lut: Array, codes: Array, k: int) -> Tuple[Array, Array]:
+    d = adc_distances(lut, codes)
+    neg_d, idx = jax.lax.top_k(-d, k)
+    return -neg_d, idx.astype(jnp.int32)
+
+
+class ProductQuantizer:
+    """Stateful convenience wrapper (engine-facing)."""
+
+    def __init__(self, config: PQConfig):
+        self.config = config
+        self.codebooks: Optional[Array] = None
+
+    @property
+    def is_trained(self) -> bool:
+        return self.codebooks is not None
+
+    def _norm(self) -> bool:
+        return self.config.metric == "cosine"
+
+    def train(self, vectors: Array, seed: int = 0) -> None:
+        self.config.validate(vectors.shape[1])
+        key = jax.random.PRNGKey(seed)
+        self.codebooks = train_codebooks(
+            key, vectors, self.config.m, self.config.k,
+            iters=self.config.iters, normalize_inputs=self._norm())
+
+    def encode(self, vectors: Array) -> Array:
+        assert self.is_trained, "train() before encode()"
+        return encode(vectors, self.codebooks, normalize_inputs=self._norm())
+
+    def decode(self, codes: Array) -> Array:
+        return decode(codes, self.codebooks)
+
+    def search(self, codes: Array, queries: Array, k: int) -> Tuple[Array, Array]:
+        lut = build_adc_lut(queries, self.codebooks, normalize_inputs=self._norm())
+        return adc_topk(lut, codes, k)
+
+    def compression_ratio(self, d: int, dtype_bytes: int = 4) -> float:
+        code_bytes = self.config.m * (1 if self.config.k <= 256 else 2)
+        return (d * dtype_bytes) / code_bytes
+
+    # --- persistence hooks (checkpoint store uses these) ---
+    def state_dict(self):
+        return {"codebooks": np.asarray(self.codebooks)}
+
+    def load_state_dict(self, state):
+        self.codebooks = jnp.asarray(state["codebooks"])

@@ -1,0 +1,6 @@
+"""Data pipeline: synthetic corpora + sharded host loading."""
+
+from .pipeline import Prefetcher, device_put_batches, host_slice
+from .synthetic import (FASHION_MNIST, SIFT, DatasetSpec, fashion_mnist_like,
+                        gaussian_mixture, lm_batches, make_corpus, sift_like,
+                        zipf_tokens)

@@ -1,0 +1,76 @@
+"""Sharded host data pipeline with background prefetch.
+
+Production posture (1000+ nodes): every host independently materialises only
+its own shard of the global batch (`host_slice`), so ingestion bandwidth
+scales linearly with hosts and a straggling host never blocks another's input
+pipeline — the step barrier is the only synchronisation point.  A bounded
+background prefetch queue hides host→device transfer behind compute
+(double-buffering).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+def host_slice(global_batch: int, num_hosts: int, host_id: int) -> slice:
+    """Contiguous rows of the global batch owned by `host_id`."""
+    if global_batch % num_hosts != 0:
+        raise ValueError(f"global_batch {global_batch} % hosts {num_hosts} != 0")
+    per = global_batch // num_hosts
+    return slice(host_id * per, (host_id + 1) * per)
+
+
+class Prefetcher:
+    """Bounded background prefetch of an iterator (depth-N double buffering)."""
+
+    _SENTINEL = object()
+
+    def __init__(self, it: Iterator[Any], depth: int = 2,
+                 transform: Optional[Callable[[Any], Any]] = None):
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
+        self._transform = transform
+        self._err: Optional[BaseException] = None
+
+        def run():
+            try:
+                for item in it:
+                    if self._transform is not None:
+                        item = self._transform(item)
+                    self._q.put(item)
+            except BaseException as e:  # surfaced on next()
+                self._err = e
+            finally:
+                self._q.put(self._SENTINEL)
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._SENTINEL:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+def device_put_batches(it: Iterator[Any], sharding=None,
+                       depth: int = 2) -> Iterator[Any]:
+    """Prefetch + device_put each pytree of numpy arrays."""
+
+    def put(batch):
+        return jax.tree_util.tree_map(
+            lambda a: jax.device_put(np.asarray(a), sharding)
+            if sharding is not None else jax.device_put(np.asarray(a)),
+            batch)
+
+    return Prefetcher(it, depth=depth, transform=put)

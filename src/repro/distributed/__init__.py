@@ -1,0 +1,4 @@
+"""Distribution: sharding policy + shard_map search."""
+
+from .sharding import ShardingPolicy, make_train_shardings
+from .search import make_flat_search, make_hamming_search, make_pq_search

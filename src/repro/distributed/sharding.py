@@ -1,0 +1,203 @@
+"""Param/activation sharding policy: TP over `model`, FSDP over `data`,
+DP over `pod` (DESIGN.md §6).
+
+Rule-based and divisibility-guarded: a dim is sharded only if the mesh axis
+divides it — otherwise it stays replicated and is recorded in the decision
+log (surface small-head GQA cases instead of letting GSPMD pad silently).
+Optimizer state inherits each param's spec; the policy is pure shape/path
+logic so it works on abstract (ShapeDtypeStruct) trees — the dry-run path.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..launch.mesh import batch_axes, mesh_axis_sizes
+
+PyTree = Any
+
+# params whose *first* dim is the contraction output of an up-projection —
+# shard it on `model` to match, avoiding an inter-matmul reshard.
+_ROW_PARALLEL_SUFFIXES = ("wd", "w_out", "w_down", "wo")
+# embedding tables: vocab × d_model — vocab over `model` (masked-gather +
+# all-reduce pattern), d over `data` (FSDP).
+_EMBED_NAMES = ("embed",)
+# block-diagonal per-head projections (see __init__ head_proj_model_only)
+_HEAD_PROJ_NAMES = ("w_q", "w_k", "w_v", "r", "gate_a", "gate_i")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(getattr(p, "idx", p)))
+    return "/".join(parts)
+
+
+def _divides(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+class ShardingPolicy:
+    """Assigns PartitionSpecs to a train/serve state tree for a mesh."""
+
+    def __init__(self, mesh: Mesh, *, shard_cache_seq: bool = False,
+                 head_proj_model_only: bool = False, dp_only: bool = False):
+        self.mesh = mesh
+        sizes = mesh_axis_sizes(mesh)
+        # dp_only: fold the model axis into data parallelism — the right
+        # layout for small-state-coupled archs (xlstm's 4-head blocked mLSTM
+        # resists 16-way TP; params fit replicated) — §Perf iteration 3
+        self.dp_only = dp_only
+        # model_size=0 => _divides() is always False => the model axis is
+        # never assigned to any param dim in dp_only mode
+        self.model_size = 0 if dp_only else sizes.get("model", 1)
+        self.data_size = sizes.get("data", 1)
+        self.batch_axes = batch_axes(mesh) + ("model",) if dp_only \
+            else batch_axes(mesh)
+        # flash-decode layout (§Perf): KV-cache seq dim over `model` —
+        # attention over the sharded cache becomes partial-softmax + psum
+        # (GSPMD inserts the small stat reductions), and a 32k cache that
+        # exceeds per-chip HBM under batch-only sharding fits again.
+        self.shard_cache_seq = shard_cache_seq
+        # block-diagonal per-head projections (mlstm w_q/k/v, slstm r,
+        # rglru gates) are small; FSDP-sharding their contraction dim forces
+        # GSPMD "involuntary full rematerialization" activation gathers
+        # (observed on xlstm train — §Perf) — column-parallel-only instead
+        self.head_proj_model_only = head_proj_model_only
+        self.decisions: List[Tuple[str, Tuple[int, ...], P]] = []
+
+    # ------------------------------------------------------------- params
+    def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        name = path.rsplit("/", 1)[-1]
+        nd = len(shape)
+        spec: List[Optional[Any]] = [None] * nd
+
+        if self.head_proj_model_only and name in _HEAD_PROJ_NAMES:
+            if _divides(shape[nd - 1], self.model_size):
+                spec[nd - 1] = "model"
+            return P(*spec)
+
+        if nd >= 2:
+            if name in _EMBED_NAMES:
+                if _divides(shape[0], self.model_size):
+                    spec[0] = "model"
+                if _divides(shape[1], self.data_size):
+                    spec[1] = "data"
+            elif name.rstrip("0123456789_") in _ROW_PARALLEL_SUFFIXES \
+                    or name in _ROW_PARALLEL_SUFFIXES:
+                # row-parallel: contraction dim over model, output over data
+                cdim = nd - 2
+                if _divides(shape[cdim], self.model_size):
+                    spec[cdim] = "model"
+                if _divides(shape[nd - 1], self.data_size):
+                    spec[nd - 1] = "data"
+            else:
+                # column-parallel default: last dim over model,
+                # biggest other dim over data (FSDP)
+                if _divides(shape[nd - 1], self.model_size):
+                    spec[nd - 1] = "model"
+                rest = [(shape[i], i) for i in range(nd - 1)]
+                rest.sort(reverse=True)
+                for sz, i in rest:
+                    if _divides(sz, self.data_size) and sz >= 64:
+                        spec[i] = "data"
+                        break
+        # stacked-unit leading dim (scan over layers) stays unsharded: it is
+        # sliced per scan step.
+        return P(*spec)
+
+    def spec_tree(self, abstract_tree: PyTree) -> PyTree:
+        def rule(path, leaf):
+            spec = self.param_spec(_path_str(path), leaf.shape)
+            self.decisions.append((_path_str(path), tuple(leaf.shape), spec))
+            return spec
+
+        return jax.tree_util.tree_map_with_path(rule, abstract_tree)
+
+    def sharding_tree(self, abstract_tree: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s),
+            self.spec_tree(abstract_tree),
+            is_leaf=lambda x: isinstance(x, P))
+
+    # -------------------------------------------------------------- batch
+    @property
+    def n_batch_shards(self) -> int:
+        sizes = mesh_axis_sizes(self.mesh)
+        n = 1
+        for ax in self.batch_axes:
+            n *= sizes.get(ax, 1)
+        return n
+
+    def batch_spec(self, shape: Tuple[int, ...]) -> P:
+        """Shard dim 0 (global batch) over (pod, data) iff divisible
+        (long_500k has global_batch=1 — replicated)."""
+        ndim = len(shape)
+        if ndim == 0 or not _divides(shape[0], self.n_batch_shards):
+            return P(*([None] * ndim))
+        return P(self.batch_axes, *([None] * (ndim - 1)))
+
+    def batch_spec_tree(self, abstract_batch: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(
+            lambda l: self.batch_spec(l.shape), abstract_batch)
+
+    def batch_sharding_tree(self, abstract_batch: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(
+            lambda l: NamedSharding(self.mesh, self.batch_spec(l.shape)),
+            abstract_batch)
+
+    # -------------------------------------------------- decode/serve state
+    def serve_state_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        """Decode state: batch dim over (pod, data); stacked-unit leaves have
+        the batch at dim 1 (dim 0 is the scanned unit axis)."""
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        # stacked-unit leaves (block_states/<i>/..., cross_kv) carry the
+        # scanned unit axis at dim 0 and batch at dim 1; tail-block states
+        # and pos have batch at dim 0
+        stacked = ("block_states" in path or "cross_kv" in path) \
+            and "tail" not in path and nd >= 2
+        batch_dim = 1 if stacked else 0
+        spec: List[Optional[Any]] = [None] * nd
+        if _divides(shape[batch_dim], self.n_batch_shards):
+            spec[batch_dim] = self.batch_axes
+        # KV caches (units, B, S, nkv, dh): optionally shard S over `model`
+        leaf = path.rsplit("/", 1)[-1]
+        if (self.shard_cache_seq and leaf in ("k", "v") and nd == 5
+                and _divides(shape[2], self.model_size)):
+            spec[2] = "model"
+        return P(*spec)
+
+    def serve_sharding_tree(self, abstract_state: PyTree) -> PyTree:
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(
+                self.mesh, self.serve_state_spec(_path_str(p), l.shape)),
+            abstract_state)
+
+    # ------------------------------------------------------------- report
+    def replicated_report(self) -> List[str]:
+        """Large params left fully replicated (divisibility misses)."""
+        out = []
+        for path, shape, spec in self.decisions:
+            n = 1
+            for s in shape:
+                n *= s
+            if n >= 1 << 20 and all(a is None for a in spec):
+                out.append(f"{path} {shape} replicated")
+        return out
+
+
+def make_train_shardings(policy: ShardingPolicy, abstract_state,
+                         abstract_batch):
+    """(state_shardings, batch_shardings) NamedSharding trees."""
+    return (policy.sharding_tree(abstract_state),
+            policy.batch_sharding_tree(abstract_batch))

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels: the paper's perf-critical distance arithmetic
+(l2/dot GEMM, PQ-ADC, packed Hamming) + the fused weight-resident sLSTM
+sequence kernel motivated by the §Perf roofline work."""
+
+from .ops import (dot_distances, hamming_distances, l2_distances,
+                  pq_adc_distances)
+
+__all__ = ["dot_distances", "hamming_distances", "l2_distances",
+           "pq_adc_distances"]

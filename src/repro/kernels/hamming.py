@@ -1,0 +1,65 @@
+"""Packed-Hamming-distance Pallas kernel (DESIGN.md §2).
+
+The paper's BQ search is XOR + POPCNT over packed words; on TPU this is VPU
+(vector unit) work: uint32 lanes, ``population_count`` per lane, lane-sum.
+
+Grid: (Q/TQ, N/TN); both code tiles live in VMEM (W words per row — 256-bit
+codes are W=8 uint32s, so a 256×512 tile pair is ~1.5 MiB).  The XOR+popcount
+slab (TQ, TN, W) is materialized per tile in VMEM (256·512·8·4 = 4 MiB with
+the defaults) and reduced on the fly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TQ = 128
+DEFAULT_TN = 512
+
+
+def _hamming_kernel(q_ref, x_ref, o_ref):
+    q = q_ref[...]                                # (TQ, W) uint32
+    x = x_ref[...]                                # (TN, W) uint32
+    xor = jnp.bitwise_xor(q[:, None, :], x[None, :, :])   # (TQ, TN, W)
+    pc = jax.lax.population_count(xor).astype(jnp.int32)
+    o_ref[...] = jnp.sum(pc, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "tn", "interpret"))
+def hamming_kernel(
+    q_codes: jax.Array,
+    x_codes: jax.Array,
+    *,
+    tq: int = DEFAULT_TQ,
+    tn: int = DEFAULT_TN,
+    interpret: bool = False,
+) -> jax.Array:
+    """(Q, W) uint32 × (N, W) uint32 -> (Q, N) int32 Hamming distances."""
+    assert q_codes.dtype == jnp.uint32 and x_codes.dtype == jnp.uint32
+    q_n, w = q_codes.shape
+    x_n, w2 = x_codes.shape
+    assert w == w2, (w, w2)
+
+    tq = min(tq, max(8, q_n))
+    tn = min(tn, max(128, x_n))
+    gq = -(-q_n // tq)
+    gn = -(-x_n // tn)
+    qp = jnp.pad(q_codes, ((0, gq * tq - q_n), (0, 0)))
+    xp = jnp.pad(x_codes, ((0, gn * tn - x_n), (0, 0)))
+
+    out = pl.pallas_call(
+        _hamming_kernel,
+        grid=(gq, gn),
+        in_specs=[
+            pl.BlockSpec((tq, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gq * tq, gn * tn), jnp.int32),
+        interpret=interpret,
+    )(qp, xp)
+    return out[:q_n, :x_n]

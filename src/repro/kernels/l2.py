@@ -1,0 +1,108 @@
+"""Blocked L2 / dot distance-matrix Pallas kernel — the paper's SIMD distance
+loop re-derived for the TPU MXU (DESIGN.md §2).
+
+The AVX2/FMA inner loop of the paper becomes one systolic contraction:
+``‖q−x‖² = ‖q‖² + ‖x‖² − 2·q·x`` — the cross term is a (TQ, TK)·(TK, TN)
+matmul on the MXU; the norm corrections ride along in the same tile.
+
+Grid: (Q/TQ, N/TN, D/TK) with accumulation over the K axis — the canonical
+Pallas matmul schedule.  Block shapes are 128-aligned for MXU occupancy; the
+fp32 accumulator lives in the output VMEM tile across K steps (revisited,
+same (i, j) block for every k), so no scratch is needed.
+
+VMEM budget per grid cell (defaults TQ=TN=256, TK=512, fp32):
+  q tile 256·512·4 = 512 KiB, x tile 512 KiB, out tile 256 KiB  ≈ 1.3 MiB
+  « 16 MiB v5e VMEM, leaving room for double-buffered pipelining.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TQ = 256
+DEFAULT_TN = 256
+DEFAULT_TK = 512
+
+
+def _l2_kernel(q_ref, x_ref, o_ref, *, n_k: int, mode: str):
+    """One (TQ, TN) output tile; accumulates across the k grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...].astype(jnp.float32)            # (TQ, TK)
+    x = x_ref[...].astype(jnp.float32)            # (TN, TK)
+    # cross term on the MXU
+    acc = -2.0 * jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (TQ, TN)
+    if mode == "l2":
+        qq = jnp.sum(q * q, axis=1)[:, None]      # (TQ, 1)
+        xx = jnp.sum(x * x, axis=1)[None, :]      # (1, TN)
+        acc = acc + qq + xx
+    else:  # dot: negative inner product = 0.5 * (-2 q.x)
+        acc = 0.5 * acc
+    o_ref[...] += acc
+
+    if mode == "l2":
+        @pl.when(k == n_k - 1)
+        def _clamp():
+            o_ref[...] = jnp.maximum(o_ref[...], 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "tq", "tn", "tk", "interpret"))
+def l2_distance_kernel(
+    queries: jax.Array,
+    corpus: jax.Array,
+    *,
+    mode: str = "l2",
+    tq: int = DEFAULT_TQ,
+    tn: int = DEFAULT_TN,
+    tk: int = DEFAULT_TK,
+    interpret: bool = False,
+) -> jax.Array:
+    """(Q, D) × (N, D) -> (Q, N) blocked distance matrix.
+
+    Inputs of any shape are zero-padded up to tile multiples (zero rows don't
+    disturb the cross/norm terms of real rows); output is sliced back.
+    """
+    if mode not in ("l2", "dot"):
+        raise ValueError(f"mode {mode!r}")
+    q_n, d = queries.shape
+    x_n, d2 = corpus.shape
+    assert d == d2, (d, d2)
+
+    tq = min(tq, max(8, q_n))
+    tn = min(tn, max(128, x_n))
+    tk = min(tk, d)
+
+    def pad_to(a, rows, cols):
+        return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+    gq = -(-q_n // tq)
+    gn = -(-x_n // tn)
+    gk = -(-d // tk)
+    qp = pad_to(queries, gq * tq, gk * tk)
+    xp = pad_to(corpus, gn * tn, gk * tk)
+
+    out = pl.pallas_call(
+        functools.partial(_l2_kernel, n_k=gk, mode=mode),
+        grid=(gq, gn, gk),
+        in_specs=[
+            pl.BlockSpec((tq, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tn, tk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tq, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gq * tq, gn * tn), jnp.float32),
+        interpret=interpret,
+    )(qp, xp)
+    return out[:q_n, :x_n]

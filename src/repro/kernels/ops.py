@@ -1,0 +1,67 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Platform dispatch: on TPU the compiled kernels run natively; elsewhere (this
+CPU container) they execute in ``interpret=True`` mode — same kernel body,
+Python-evaluated — so correctness is validated everywhere while the BlockSpec
+tiling is real TPU structure.  ``force_ref=True`` (or env QUANTIXAR_REF=1)
+routes to the pure-jnp oracle instead, which is what the engine uses for
+speed on CPU.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from . import ref
+from .hamming import hamming_kernel
+from .l2 import l2_distance_kernel
+from .pq_adc import pq_adc_kernel
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _use_ref(force_ref: Optional[bool]) -> bool:
+    if force_ref is not None:
+        return force_ref
+    if os.environ.get("QUANTIXAR_REF", ""):
+        return True
+    # On non-TPU backends interpret-mode Pallas is correct but slow; default
+    # to the oracle for library use. Tests pass force_ref=False explicitly.
+    return _interpret()
+
+
+def l2_distances(queries: Array, corpus: Array, *,
+                 force_ref: Optional[bool] = None, **tiles) -> Array:
+    if _use_ref(force_ref):
+        return ref.l2_distance_ref(queries, corpus)
+    return l2_distance_kernel(queries, corpus, mode="l2",
+                              interpret=_interpret(), **tiles)
+
+
+def dot_distances(queries: Array, corpus: Array, *,
+                  force_ref: Optional[bool] = None, **tiles) -> Array:
+    if _use_ref(force_ref):
+        return ref.dot_distance_ref(queries, corpus)
+    return l2_distance_kernel(queries, corpus, mode="dot",
+                              interpret=_interpret(), **tiles)
+
+
+def pq_adc_distances(lut: Array, codes: Array, *,
+                     force_ref: Optional[bool] = None, **tiles) -> Array:
+    if _use_ref(force_ref):
+        return ref.pq_adc_ref(lut, codes)
+    return pq_adc_kernel(lut, codes, interpret=_interpret(), **tiles)
+
+
+def hamming_distances(q_codes: Array, x_codes: Array, *,
+                      force_ref: Optional[bool] = None, **tiles) -> Array:
+    if _use_ref(force_ref):
+        return ref.hamming_ref(q_codes, x_codes)
+    return hamming_kernel(q_codes, x_codes, interpret=_interpret(), **tiles)

@@ -1,0 +1,96 @@
+"""PQ asymmetric-distance-computation Pallas kernel (DESIGN.md §2).
+
+The paper's AVX2 "fast-scan" analogue on TPU: x86 PQ scan uses PSHUFB 16-way
+LUT shuffles; the TPU has no byte-shuffle unit, but it has an MXU — so the
+gather ``out[q,n] = Σ_i lut[q,i,codes[n,i]]`` is re-expressed as a dense
+contraction against a one-hot expansion of the codes:
+
+    onehot (TN, m, k) = (codes[:, :, None] == iota(k))
+    out (TQ, TN)      = einsum('qmk,nmk->qn', lut_tile, onehot)
+
+One-hot never leaves VMEM; the contraction runs on the MXU at (m·k) effective
+depth.  For k ≤ 256 and m ≤ 64 the LUT tile (TQ·m·k·4 ≤ 8·64·256·4 = 512 KiB)
+and code tile (TN·m = 512·64 = 32 KiB) fit comfortably; the one-hot expansion
+(TN·m·k·4 = 512·64·256·4 = 32 MiB) would NOT — so the kernel loops over the m
+sub-spaces in chunks (``m_chunk``), keeping the live one-hot slab at
+TN·m_chunk·k·4 ≤ 512·8·256·4 = 4 MiB.
+
+Grid: (Q/TQ, N/TN); codes are streamed through VMEM tile by tile while each
+query's LUT stays resident — exactly the paper's "LUT in registers, codes
+streamed" SIMD scan, with VMEM playing the register-file role.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TQ = 8
+DEFAULT_TN = 512
+DEFAULT_M_CHUNK = 8
+
+
+def _adc_kernel(lut_ref, codes_ref, o_ref, *, m_chunk: int):
+    lut = lut_ref[...].astype(jnp.float32)        # (TQ, m, k)
+    codes = codes_ref[...].astype(jnp.int32)      # (TN, m)
+    tq, m, k = lut.shape
+    tn = codes.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2)
+
+    acc = jnp.zeros((tq, tn), dtype=jnp.float32)
+    for m0 in range(0, m, m_chunk):               # static python loop
+        mc = min(m_chunk, m - m0)
+        onehot = (codes[:, m0:m0 + mc, None] == iota).astype(jnp.float32)
+        lut_c = lut[:, m0:m0 + mc, :]
+        # MXU contraction over (mc, k): (TQ, mc·k) @ (mc·k, TN)
+        acc += jax.lax.dot_general(
+            lut_c.reshape(tq, mc * k), onehot.reshape(tn, mc * k),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tq", "tn", "m_chunk", "interpret"))
+def pq_adc_kernel(
+    lut: jax.Array,
+    codes: jax.Array,
+    *,
+    tq: int = DEFAULT_TQ,
+    tn: int = DEFAULT_TN,
+    m_chunk: int = DEFAULT_M_CHUNK,
+    interpret: bool = False,
+) -> jax.Array:
+    """ADC scan: lut (Q, m, k) float × codes (N, m) uint8/16 -> (Q, N) float32.
+
+    Padding: queries pad with zero LUTs, codes pad with code 0 — padded rows /
+    columns are sliced off before returning, so their values are irrelevant.
+    """
+    q_n, m, k = lut.shape
+    x_n, m2 = codes.shape
+    assert m == m2, (m, m2)
+
+    tq = min(tq, max(1, q_n))
+    tn = min(tn, max(128, x_n))
+    gq = -(-q_n // tq)
+    gn = -(-x_n // tn)
+    lut_p = jnp.pad(lut.astype(jnp.float32),
+                    ((0, gq * tq - q_n), (0, 0), (0, 0)))
+    codes_p = jnp.pad(codes, ((0, gn * tn - x_n), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_adc_kernel, m_chunk=m_chunk),
+        grid=(gq, gn),
+        in_specs=[
+            pl.BlockSpec((tq, m, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tn, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gq * tq, gn * tn), jnp.float32),
+        interpret=interpret,
+    )(lut_p, codes_p)
+    return out[:q_n, :x_n]

@@ -1,0 +1,121 @@
+"""Fused sLSTM sequence kernel — weight-resident sequential recurrence.
+
+Why (EXPERIMENTS.md §Perf 4.4): the pure-XLA sLSTM scan re-reads the
+recurrent weights every timestep — 16.8 MB × 24,576 steps ≈ 6.6 TB of HBM
+traffic per xlstm-1.3b training step, the measured memory floor.  This kernel
+is the structural fix: the block-diagonal recurrent weights live in VMEM for
+the *whole sequence* (constant index_map ⇒ fetched once), the state (h,c,n,m)
+lives in VMEM scratch across sequential grid steps, and only the precomputed
+input-side gates stream through.
+
+Grid: (S / chunk,) — TPU grids iterate sequentially, so scratch carries the
+recurrence across chunks.  Per-step HBM traffic drops from
+(weights + gates + states) to (gates only): 16.8 MB + ~100 KB → ~128 KB,
+a ~130x reduction on the dominant term (analytic; validated for correctness
+in interpret mode against the pure-jnp oracle).
+
+Stabilised exp-gate cell (matches repro.models.recurrent._slstm_cell):
+    pre    = gates_x[t] + [h·R_i, h·R_f, h·R_z, h·R_o] + b
+    logf   = log_sigmoid(pre_f);  m' = max(logf + m, pre_i)
+    i'     = exp(pre_i − m');     f' = exp(logf + m − m')
+    c'     = f'·c + i'·tanh(pre_z);  n' = f'·n + i'
+    h'     = sigmoid(pre_o) · c' / max(n', 1e−6)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _slstm_kernel(gates_ref, r_ref, b_ref, o_ref, h_ref, c_ref, n_ref,
+                  m_ref, *, n_heads: int, chunk: int):
+    """One grid step = `chunk` sequential timesteps.
+
+    gates_ref: (B, chunk, 4d) input-side gates for this chunk (streamed)
+    r_ref:     (4, H, blk, blk) recurrent weights (VMEM-resident, constant)
+    b_ref:     (1, 4d) bias
+    o_ref:     (B, chunk, d) hidden-state output block
+    h/c/n/m_ref: (B, d) fp32 VMEM scratch carried across grid steps
+    """
+    step0 = pl.program_id(0) == 0
+
+    @pl.when(step0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+
+    r = r_ref[...].astype(jnp.float32)          # (4, H, blk, blk)
+    bias = b_ref[0].astype(jnp.float32)         # (4d,)
+    b_sz, _, d4 = gates_ref.shape
+    d = d4 // 4
+    blk = d // n_heads
+
+    def step(t, _):
+        h = h_ref[...]
+        g_t = gates_ref[:, t, :].astype(jnp.float32)          # (B, 4d)
+        hh = h.reshape(b_sz, n_heads, blk)
+        rec = jnp.einsum("bnk,gnkl->bgnl", hh, r,
+                         preferred_element_type=jnp.float32)
+        pre = g_t + rec.reshape(b_sz, 4 * d) + bias
+        gi, gf, gz, go = (pre[:, :d], pre[:, d:2 * d],
+                          pre[:, 2 * d:3 * d], pre[:, 3 * d:])
+        logf = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(logf + m_ref[...], gi)
+        i_p = jnp.exp(gi - m_new)
+        f_p = jnp.exp(logf + m_ref[...] - m_new)
+        c_new = f_p * c_ref[...] + i_p * jnp.tanh(gz)
+        n_new = f_p * n_ref[...] + i_p
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+        h_ref[...] = h_new
+        c_ref[...] = c_new
+        n_ref[...] = n_new
+        m_ref[...] = m_new
+        o_ref[:, t, :] = h_new.astype(o_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, chunk, step, ())
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_heads", "chunk", "interpret"))
+def slstm_sequence_kernel(gates_x: jax.Array, r: jax.Array, b: jax.Array,
+                          *, n_heads: int, chunk: int = DEFAULT_CHUNK,
+                          interpret: bool = False) -> jax.Array:
+    """Fused sLSTM over a full sequence.
+
+    Args:
+      gates_x: (B, S, 4d) precomputed input-side gates (x @ w_in).
+      r: (4, H, blk, blk) block-diagonal recurrent weights.
+      b: (4d,) gate biases.
+    Returns:
+      h: (B, S, d) hidden states.
+    """
+    b_sz, s, d4 = gates_x.shape
+    d = d4 // 4
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    grid = (s // chunk,)
+
+    return pl.pallas_call(
+        functools.partial(_slstm_kernel, n_heads=n_heads, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_sz, chunk, d4), lambda i: (0, i, 0)),
+            pl.BlockSpec(r.shape, lambda i: (0, 0, 0, 0)),   # resident
+            pl.BlockSpec((1, d4), lambda i: (0, 0)),         # resident
+        ],
+        out_specs=pl.BlockSpec((b_sz, chunk, d), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_sz, s, d), gates_x.dtype),
+        scratch_shapes=[pltpu.VMEM((b_sz, d), jnp.float32)
+                        for _ in range(4)],    # h, c, n, m carried state
+        interpret=interpret,
+    )(gates_x, r, b[None, :])

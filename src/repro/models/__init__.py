@@ -1,0 +1,8 @@
+"""Unified model core for the 10 assigned architectures."""
+
+from .config import ModelConfig
+from .model import (abstract_params, decode_step, encode, forward,
+                    init_decode_state, init_params)
+from .steps import (TrainState, abstract_train_state, cross_entropy,
+                    init_train_state, make_loss_fn, make_serve_step,
+                    make_train_step)

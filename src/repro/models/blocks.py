@@ -1,0 +1,200 @@
+"""Block-level init/apply dispatch for every block type, train + decode paths.
+
+A "unit" is one period of cfg.block_pattern; the model scans over stacked
+units (model.py).  Each block is pre-norm residual; mlstm/slstm are
+self-contained (their FFN/gating is internal, following xLSTM).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from . import recurrent as R
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def block_window(cfg: ModelConfig, block_type: str) -> int:
+    if block_type.startswith("swa"):
+        return cfg.window
+    if block_type == "local_attn":
+        return cfg.local_window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, block_type: str,
+               with_cross: bool = False) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {}
+    if block_type in ("attn", "swa", "local_attn", "attn_moe", "swa_moe"):
+        p["norm1"] = L.init_norm(cfg)
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["norm2"] = L.init_norm(cfg)
+        if block_type.endswith("moe"):
+            p["moe"] = L.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+    elif block_type == "rglru":
+        p["norm1"] = L.init_norm(cfg)
+        p["rglru"] = R.init_rglru(ks[0], cfg)
+        p["norm2"] = L.init_norm(cfg)
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    elif block_type == "mlstm":
+        p["norm1"] = L.init_norm(cfg)
+        p["mlstm"] = R.init_mlstm(ks[0], cfg)
+    elif block_type == "slstm":
+        p["norm1"] = L.init_norm(cfg)
+        p["slstm"] = R.init_slstm(ks[0], cfg)
+    else:  # pragma: no cover
+        raise ValueError(block_type)
+    if with_cross:
+        p["cross_norm"] = L.init_norm(cfg)
+        p["cross"] = L.init_attention(ks[5], cfg, cross=True)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# train (full sequence)
+# ---------------------------------------------------------------------------
+
+def apply_block_train(p: Params, x: Array, cfg: ModelConfig, block_type: str,
+                      positions: Array, *, causal: bool = True,
+                      enc_out: Optional[Array] = None,
+                      enc_pos: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if block_type in ("attn", "swa", "local_attn", "attn_moe", "swa_moe"):
+        h = L.apply_norm(p["norm1"], x, cfg)
+        x = x + L.attention_full(p["attn"], h, cfg, positions, causal=causal,
+                                 window=block_window(cfg, block_type))
+        if "cross" in p and enc_out is not None:
+            h = L.apply_norm(p["cross_norm"], x, cfg)
+            k, v, kp = _cross_kv(p["cross"], enc_out, cfg, enc_pos)
+            x = x + L.attention_full(p["cross"], h, cfg, positions,
+                                     causal=False, window=0,
+                                     kv_override=(k, v, kp))
+        h = L.apply_norm(p["norm2"], x, cfg)
+        if block_type.endswith("moe"):
+            delta, aux = L.apply_moe(p["moe"], h, cfg)
+            x = x + delta
+        else:
+            x = x + L.apply_mlp(p["mlp"], h, cfg)
+    elif block_type == "rglru":
+        h = L.apply_norm(p["norm1"], x, cfg)
+        x = x + R.apply_rglru(p["rglru"], h, cfg)
+        h = L.apply_norm(p["norm2"], x, cfg)
+        x = x + L.apply_mlp(p["mlp"], h, cfg)
+    elif block_type == "mlstm":
+        h = L.apply_norm(p["norm1"], x, cfg)
+        x = x + R.apply_mlstm(p["mlstm"], h, cfg)
+    elif block_type == "slstm":
+        h = L.apply_norm(p["norm1"], x, cfg)
+        x = x + R.apply_slstm(p["slstm"], h, cfg)
+    return x, aux
+
+
+def _cross_kv(p_attn: Params, enc_out: Array, cfg: ModelConfig,
+              enc_pos: Optional[Array]):
+    """K/V projections of encoder output for cross-attention (no RoPE)."""
+    b, t, _ = enc_out.shape
+    dt = enc_out.dtype
+    nkv, dh = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p_attn["wk"].astype(dt)).reshape(b, t, nkv, dh)
+    v = (enc_out @ p_attn["wv"].astype(dt)).reshape(b, t, nkv, dh)
+    if enc_pos is None:
+        enc_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    return k, v, enc_pos
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array     # (B, S_cache, nkv, dh)
+    v: Array
+
+
+def block_state_init(cfg: ModelConfig, block_type: str, batch: int,
+                     cache_len: int, dtype) -> Any:
+    nkv, dh = cfg.n_kv_heads, cfg.head_dim
+    w = block_window(cfg, block_type)
+    if block_type in ("attn", "swa", "local_attn", "attn_moe", "swa_moe"):
+        s = min(cache_len, w) if w > 0 else cache_len
+        z = jnp.zeros((batch, s, nkv, dh), dtype)
+        return KVCache(k=z, v=z)
+    if block_type == "rglru":
+        return R.rglru_init_state(cfg, batch, dtype)
+    if block_type == "mlstm":
+        return R.mlstm_init_state(cfg, batch, dtype)
+    if block_type == "slstm":
+        return R.slstm_init_state(cfg, batch, dtype)
+    raise ValueError(block_type)  # pragma: no cover
+
+
+def apply_block_decode(p: Params, x_t: Array, state: Any, pos: Array,
+                       cfg: ModelConfig, block_type: str,
+                       cross_kv: Optional[Tuple[Array, Array]] = None
+                       ) -> Tuple[Array, Any]:
+    """x_t (B, 1, d); pos (B,). Returns (x_t, new_state)."""
+    w = block_window(cfg, block_type)
+    if block_type in ("attn", "swa", "local_attn", "attn_moe", "swa_moe"):
+        ring = w > 0 and state.k.shape[1] <= w
+        h = L.apply_norm(p["norm1"], x_t, cfg)
+        attn, ck, cv = L.attention_decode(p["attn"], h, state.k, state.v,
+                                          pos, cfg, window=w, ring=ring)
+        x_t = x_t + attn
+        state = KVCache(k=ck, v=cv)
+        if "cross" in p and cross_kv is not None:
+            h = L.apply_norm(p["cross_norm"], x_t, cfg)
+            x_t = x_t + _cross_decode(p["cross"], h, cross_kv, cfg)
+        h = L.apply_norm(p["norm2"], x_t, cfg)
+        if block_type.endswith("moe"):
+            delta, _ = L.apply_moe(p["moe"], h, cfg)
+            x_t = x_t + delta
+        else:
+            x_t = x_t + L.apply_mlp(p["mlp"], h, cfg)
+        return x_t, state
+    if block_type == "rglru":
+        h = L.apply_norm(p["norm1"], x_t, cfg)
+        delta, new_r = R.apply_rglru_decode(p["rglru"], h[:, 0], state, cfg)
+        x_t = x_t + delta[:, None, :]
+        h = L.apply_norm(p["norm2"], x_t, cfg)
+        return x_t + L.apply_mlp(p["mlp"], h, cfg), new_r
+    if block_type == "mlstm":
+        h = L.apply_norm(p["norm1"], x_t, cfg)
+        delta, new_s = R.apply_mlstm_decode(p["mlstm"], h[:, 0], state, cfg)
+        return x_t + delta[:, None, :], new_s
+    if block_type == "slstm":
+        h = L.apply_norm(p["norm1"], x_t, cfg)
+        delta, new_s = R.apply_slstm_decode(p["slstm"], h[:, 0], state, cfg)
+        return x_t + delta[:, None, :], new_s
+    raise ValueError(block_type)  # pragma: no cover
+
+
+def _cross_decode(p_cross: Params, x_t: Array,
+                  cross_kv: Tuple[Array, Array], cfg: ModelConfig) -> Array:
+    """Single-step cross-attention against precomputed encoder K/V."""
+    b, _, d = x_t.shape
+    nq, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = nq // nkv
+    dt = x_t.dtype
+    k, v = cross_kv
+    q = (x_t @ p_cross["wq"].astype(dt)).reshape(b, 1, nkv, g, dh)
+    if "q_norm" in p_cross:
+        q = L._qk_norm(q, p_cross["q_norm"])
+    sc = jnp.einsum("bsngh,btnh->bngst", q, k.astype(dt),
+                    preferred_element_type=jnp.float32) / (dh ** 0.5)
+    wts = jax.nn.softmax(sc, axis=-1).astype(dt)
+    out = jnp.einsum("bngst,btnh->bsngh", wts, v.astype(dt))
+    return out.reshape(b, 1, nq * dh) @ p_cross["wo"].astype(dt)

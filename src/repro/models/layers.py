@@ -1,0 +1,504 @@
+"""Shared layers: norms, RoPE, GQA attention (dense / chunked-online-softmax /
+decode), MLPs and grouped-capacity MoE.
+
+Precision policy: params fp32 (sharded), compute in cfg.dtype (bf16 default),
+norms/softmax/logits accumulate fp32 — the production mixed-precision recipe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else (1.0 / (shape[0] ** 0.5))
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def constrain_batch(x: Array, cfg: ModelConfig, *, rest=None) -> Array:
+    """Pin the activation batch dim to the mesh batch axes (MaxText-style
+    with_sharding_constraint at block boundaries).  Without this GSPMD may
+    replicate the token dim across `data` — N_data× redundant compute
+    (observed and fixed during the dry-run bring-up; see EXPERIMENTS.md).
+
+    With cfg.sequence_parallel, the residual stream is additionally sharded
+    (batch, S/model, d) — Megatron-SP: the norm/residual segments and their
+    backward cotangents stay sharded over `model` instead of being gathered
+    full per layer."""
+    if not cfg.batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    tail = list(rest) if rest is not None else [None] * (x.ndim - 1)
+    if (rest is None and cfg.sequence_parallel and x.ndim == 3
+            and "model" not in cfg.batch_axes):
+        tail[0] = "model"
+    return jax.lax.with_sharding_constraint(x, P(tuple(cfg.batch_axes), *tail))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(cfg: ModelConfig) -> Array:
+    dh = cfg.head_dim
+    rot = int(dh * cfg.rope_pct) // 2 * 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32)
+                                    / rot))
+    return inv  # (rot/2,)
+
+
+def apply_rope(x: Array, positions: Array, cfg: ModelConfig) -> Array:
+    """x: (B, S, H, dh); positions: (B, S) int32."""
+    dh = cfg.head_dim
+    rot = int(dh * cfg.rope_pct) // 2 * 2
+    if rot == 0:
+        return x
+    inv = rope_frequencies(cfg)                        # (rot/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, dh = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, nq * dh)),
+        "wk": _init(ks[1], (d, nkv * dh)),
+        "wv": _init(ks[2], (d, nkv * dh)),
+        "wo": _init(ks[3], (nq * dh, d)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((nq * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((nkv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((nkv * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def _qk_norm(x: Array, scale: Array) -> Array:
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+            * scale).astype(x.dtype)
+
+
+def _project_qkv(p: Params, x: Array, cfg: ModelConfig,
+                 positions: Optional[Array]) -> Tuple[Array, Array, Array]:
+    b, s, _ = x.shape
+    dh, nq, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, nq, dh)
+    k = k.reshape(b, s, nkv, dh)
+    v = v.reshape(b, s, nkv, dh)
+    if "q_norm" in p:
+        q = _qk_norm(q, p["q_norm"])
+        k = _qk_norm(k, p["k_norm"])
+    if positions is not None:
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+    return q, k, v
+
+
+def _mask_bias(q_pos: Array, k_pos: Array, causal: bool, window: int) -> Array:
+    """(..., S, T) additive mask from absolute positions."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones_like(diff, dtype=bool)
+    if causal:
+        ok &= diff >= 0
+    if window > 0:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _sdpa(q: Array, k: Array, v: Array, bias: Array) -> Array:
+    """q (B,S,nkv,g,dh), k/v (B,T,nkv,dh), bias (B,1 or nkv*g? ,S,T)."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bsngh,btnh->bngst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / (dh ** 0.5) + bias[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bngst,btnh->bsngh", w, v)
+
+
+def attention_full(p: Params, x: Array, cfg: ModelConfig, positions: Array,
+                   *, causal: bool = True, window: int = 0,
+                   kv_override: Optional[Tuple[Array, Array, Array]] = None,
+                   chunk_q: Optional[int] = None) -> Array:
+    """Full-sequence attention. Dense for short seq; chunked online-softmax
+    (flash-style, O(S·chunk) memory) beyond ``chunk_q``.
+
+    kv_override: (k, v, k_positions) for cross-attention.
+    """
+    b, s, d = x.shape
+    nq, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = nq // nkv
+    chunk_q = chunk_q or cfg.attn_chunk
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    k_pos = positions
+    if kv_override is not None:
+        k, v, k_pos = kv_override
+    qg = q.reshape(b, s, nkv, g, dh)
+
+    t = k.shape[1]
+    if s <= cfg.dense_attn_threshold or s != t or s % chunk_q != 0:
+        bias = _mask_bias(positions, k_pos, causal, window)
+        out = _sdpa(qg, k, v, bias)
+    elif (cfg.attn_schedule == "extent" and causal
+          and s // chunk_q <= 16):
+        out = _extent_attention(qg, k, v, positions, k_pos, window, chunk_q)
+    else:
+        out = _chunked_attention(qg, k, v, positions, k_pos, causal, window,
+                                 chunk_q)
+    out = out.astype(x.dtype).reshape(b, s, nq * dh)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def _chunked_attention(qg, k, v, q_pos, k_pos, causal, window, chunk):
+    """Online-softmax over q and kv chunks — fixed memory, scan-of-scan HLO.
+
+    Baseline ("masked") schedule: every (q-chunk, kv-chunk) pair is computed
+    and masked; causal skipping is a §Perf hillclimb (see launch/dryrun notes).
+    """
+    b, s, nkv, g, dh = qg.shape
+    t = k.shape[1]
+    nqc = s // chunk
+    nkc = t // chunk
+    assert s % chunk == 0 and t % chunk == 0, (s, t, chunk)
+
+    qg_c = qg.reshape(b, nqc, chunk, nkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    qp_c = q_pos.reshape(b, nqc, chunk).transpose(1, 0, 2)
+    k_c = k.reshape(b, nkc, chunk, nkv, dh).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(b, nkc, chunk, nkv, dh).transpose(1, 0, 2, 3, 4)
+    kp_c = k_pos.reshape(b, nkc, chunk).transpose(1, 0, 2)
+
+    def q_step(_, q_in):
+        q_blk, qp = q_in                                 # (B,c,nkv,g,dh), (B,c)
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            k_blk, v_blk, kp = kv_in
+            bias = _mask_bias(qp, kp, causal, window)    # (B,c,c)
+            sc = jnp.einsum("bsngh,btnh->bngst", q_blk, k_blk,
+                            preferred_element_type=jnp.float32)
+            sc = sc / (dh ** 0.5) + bias[:, None, None, :, :]
+            m_new = jnp.maximum(m, sc.max(-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + pexp.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bngst,btnh->bngsh", pexp.astype(v_blk.dtype), v_blk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, nkv, g, chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, nkv, g, chunk), jnp.float32)
+        a0 = jnp.zeros((b, nkv, g, chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (k_c, v_c, kp_c))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 3, 1, 2, 4)        # (B,c,nkv,g,dh)
+
+    _, outs = jax.lax.scan(q_step, None, (qg_c, qp_c))   # (nqc,B,c,nkv,g,dh)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, nkv, g, dh)
+
+
+def _extent_attention(qg, k, v, q_pos, k_pos, window, chunk):
+    """Causal chunked attention with static per-q-chunk kv extents.
+
+    q-chunk i attends kv ∈ [lo_i, (i+1)·c) with lo_i = max(0, (i·c − w + 1)
+    rounded down to a chunk) — fully-masked chunks are never computed
+    (vs. the masked schedule's compute-then-mask: ~2x causal waste, ~w/S
+    window waste).  Python loop over q chunks (static shapes per iteration,
+    bounded count), inner online-softmax scan over the extent.
+    """
+    b, s, nkv, g, dh = qg.shape
+    nqc = s // chunk
+    outs = []
+    for qi in range(nqc):
+        lo = 0
+        if window > 0:
+            lo = max(0, (qi * chunk - window + 1)) // chunk * chunk
+        hi = (qi + 1) * chunk
+        q_blk = qg[:, qi * chunk: hi]
+        qp = q_pos[:, qi * chunk: hi]
+        k_ext = k[:, lo: hi]
+        v_ext = v[:, lo: hi]
+        kp_ext = k_pos[:, lo: hi]
+        n_kv = (hi - lo) // chunk
+        k_c = k_ext.reshape(b, n_kv, chunk, nkv, dh).transpose(1, 0, 2, 3, 4)
+        v_c = v_ext.reshape(b, n_kv, chunk, nkv, dh).transpose(1, 0, 2, 3, 4)
+        kp_c = kp_ext.reshape(b, n_kv, chunk).transpose(1, 0, 2)
+
+        def kv_step(carry, kv_in, q_blk=q_blk, qp=qp):
+            m, l, acc = carry
+            k_blk, v_blk, kp = kv_in
+            bias = _mask_bias(qp, kp, True, window)
+            sc = jnp.einsum("bsngh,btnh->bngst", q_blk, k_blk,
+                            preferred_element_type=jnp.float32)
+            sc = sc / (dh ** 0.5) + bias[:, None, None, :, :]
+            m_new = jnp.maximum(m, sc.max(-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + pexp.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bngst,btnh->bngsh", pexp.astype(v_blk.dtype), v_blk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, nkv, g, chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, nkv, g, chunk), jnp.float32)
+        a0 = jnp.zeros((b, nkv, g, chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (k_c, v_c, kp_c))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        outs.append(out.transpose(0, 3, 1, 2, 4))      # (B,c,nkv,g,dh)
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_decode(p: Params, x: Array, cache_k: Array, cache_v: Array,
+                     pos: Array, cfg: ModelConfig, *, window: int = 0,
+                     ring: bool = False) -> Tuple[Array, Array, Array]:
+    """One-token decode with KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, S_cache, nkv, dh); pos: (B,) int32 current
+    position.  ``ring=True`` uses the cache as a circular window buffer
+    (S_cache == window) — bounded-memory SWA decode.
+    Returns (attn_out (B,1,d), new_cache_k, new_cache_v).
+    """
+    b, _, d = x.shape
+    nq, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = nq // nkv
+    s_cache = cache_k.shape[1]
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos[:, None])
+
+    slot = (pos % s_cache) if ring else pos
+    if cfg.decode_pos_mode == "uniform":
+        # all sequences share one position (synchronised batched decode):
+        # dynamic-update-slice at a scalar index — fully shardable over the
+        # batch axis, no gather/scatter of the cache (§Perf decode iteration)
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), (0, slot[0], 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), (0, slot[0], 0, 0))
+    else:
+        # ragged per-sequence positions (continuous batching): scatter update
+        bidx = jnp.arange(b)
+        cache_k = cache_k.at[bidx, slot].set(k_new[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, slot].set(v_new[:, 0].astype(cache_v.dtype))
+
+    idx = jnp.arange(s_cache)
+    if ring:
+        # slot i holds absolute position pos - ((pos - i) mod S); valid if >= 0
+        k_positions = pos[:, None] - ((pos[:, None] - idx[None, :]) % s_cache)
+        valid = k_positions >= 0
+        if window > 0:
+            valid &= (pos[:, None] - k_positions) < window
+    else:
+        k_positions = jnp.broadcast_to(idx[None, :], (b, s_cache))
+        valid = idx[None, :] <= pos[:, None]
+        if window > 0:
+            valid &= (pos[:, None] - idx[None, :]) < window
+
+    qg = q.reshape(b, 1, nkv, g, dh)
+    sc = jnp.einsum("bsngh,btnh->bngst", qg, cache_k.astype(q.dtype),
+                    preferred_element_type=jnp.float32) / (dh ** 0.5)
+    sc = sc + jnp.where(valid, 0.0, NEG_INF)[:, None, None, None, :]
+    w = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnh->bsngh", w, cache_v.astype(q.dtype))
+    out = out.reshape(b, 1, nq * dh) @ p["wo"].astype(x.dtype)
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {"wg": _init(ks[0], (d, f)), "wu": _init(ks[1], (d, f)),
+                "wd": _init(ks[2], (f, d))}
+    return {"wu": _init(ks[0], (d, f)), "bu": jnp.zeros((f,), jnp.float32),
+            "wd": _init(ks[1], (f, d)), "bd": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_mlp(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    dt = x.dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(x @ p["wg"].astype(dt)) * (x @ p["wu"].astype(dt))
+        return h @ p["wd"].astype(dt)
+    h = jax.nn.gelu(x @ p["wu"].astype(dt) + p["bu"].astype(dt))
+    return h @ p["wd"].astype(dt) + p["bd"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MoE (GShard-style grouped capacity routing; DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 4)
+    p = {"router": _init(ks[0], (d, e), scale=0.02)}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["wg"] = _init(ks[1], (e, d, f))
+        p["wu"] = _init(ks[2], (e, d, f))
+        p["wd"] = _init(ks[3], (e, f, d))
+    else:
+        p["wu"] = _init(ks[1], (e, d, f))
+        p["wd"] = _init(ks[2], (e, f, d))
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, group: int) -> int:
+    cap = int(group * cfg.moe_top_k * cfg.moe_capacity_factor
+              / cfg.moe_experts)
+    return max(cap, cfg.moe_top_k)
+
+
+def apply_moe(p: Params, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """Grouped top-k capacity routing (GShard-style).
+
+    The sequence is cut into "waves" of ``moe_group_size`` tokens per batch
+    row; each wave routes independently with capacity C = g·k·cf/E.  The
+    *batch* dim stays a vmap dim (it carries the data-sharding — scanning
+    over it would serialize across devices); the *wave* dim is a lax.scan
+    (bounds the (g, E, C) dispatch one-hots in memory).  Token order is
+    preserved.  Returns (output, aux_load_balancing_loss).
+    """
+    b, s, d = x.shape
+    e, topk = cfg.moe_experts, cfg.moe_top_k
+    g = min(cfg.moe_group_size, s)
+    assert s % g == 0, (s, g)
+    n_waves = s // g
+    cap = moe_capacity(cfg, g)
+    dt = x.dtype
+
+    waves = x.reshape(b, n_waves, g, d).transpose(1, 0, 2, 3)  # (W, B, g, d)
+
+    def _experts(xin):
+        """Batched expert FFN: (E, C, d) -> (E, C, d)."""
+        if cfg.mlp_type in ("swiglu", "geglu"):
+            act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+            h = act(jnp.einsum("ecd,edf->ecf", xin, p["wg"].astype(dt))) * \
+                jnp.einsum("ecd,edf->ecf", xin, p["wu"].astype(dt))
+        else:
+            h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xin,
+                                       p["wu"].astype(dt)))
+        return jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(dt))
+
+    def route_group(xg):
+        logits = (xg @ p["router"].astype(dt)).astype(jnp.float32)  # (g, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, topk)                   # (g, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        sel = jax.nn.one_hot(top_e, e, dtype=jnp.float32)           # (g, k, E)
+        sel_any = sel.sum(1)                                        # (g, E)
+        # position of each token within its expert queue (per k slot,
+        # priority: k slot 0 first, then token order)
+        pos = jnp.cumsum(sel.reshape(g * topk, e), axis=0).reshape(
+            g, topk, e) - sel  # 0-based
+        keep = (pos < cap) * sel                                    # (g,k,E)
+        pos_idx = jnp.minimum(pos, cap - 1).astype(jnp.int32)
+
+        if cfg.moe_dispatch == "gather":
+            # index-based dispatch: O(E·C·d) gathers, no one-hot matmuls.
+            # slot = expert*cap + pos for each kept (token, k); unique by
+            # construction (pos is a per-expert running count).
+            slot_ek = (top_e * cap
+                       + (pos_idx * sel).sum(-1).astype(jnp.int32))  # (g, k)
+            kept = (keep.sum(-1) > 0)                                # (g, k)
+            flat_slot = jnp.where(kept, slot_ek, e * cap)            # dump->EC
+            tok_ids = jnp.broadcast_to(
+                jnp.arange(g, dtype=jnp.int32)[:, None], (g, topk))
+            buf_tok = jnp.full((e * cap + 1,), g, jnp.int32)         # g = zero row
+            buf_tok = buf_tok.at[flat_slot.reshape(-1)].set(
+                tok_ids.reshape(-1))
+            xg_pad = jnp.concatenate(
+                [xg, jnp.zeros((1, d), dt)], axis=0)                 # (g+1, d)
+            xin = xg_pad[buf_tok[: e * cap]].reshape(e, cap, d)
+            hout = _experts(xin)
+            h_pad = jnp.concatenate(
+                [hout.reshape(e * cap, d), jnp.zeros((1, d), dt)], axis=0)
+            per_k = h_pad[jnp.where(kept, slot_ek, e * cap)]         # (g,k,d)
+            yg = jnp.einsum("gk,gkd->gd", top_p.astype(dt)
+                            * kept.astype(dt), per_k)
+        else:
+            # GShard one-hot einsum dispatch (baseline; §Perf shows the
+            # combine matmul costs g·E·C·d flops — dominant when d_ff < d)
+            disp = (keep[..., None]
+                    * jax.nn.one_hot(pos_idx, cap, dtype=jnp.float32)).sum(1)
+            comb = (keep * top_p[..., None])[..., None] * \
+                jax.nn.one_hot(pos_idx, cap, dtype=jnp.float32)
+            comb = comb.sum(1)                                       # (g,E,C)
+            xin = jnp.einsum("gec,gd->ecd", disp.astype(dt), xg)     # (E,C,d)
+            hout = _experts(xin)
+            yg = jnp.einsum("gec,ecd->gd", comb.astype(dt), hout)
+        # load-balancing aux (Switch): E * sum_e f_e * P_e
+        f_e = sel_any.mean(0)
+        p_e = probs.mean(0)
+        aux = e * jnp.sum(f_e * p_e)
+        return yg, aux
+
+    def wave_step(_, xw):                       # xw: (B, g, d)
+        yw, aux = jax.vmap(route_group)(xw)     # batch stays a vmap dim
+        return None, (yw, aux.mean())
+
+    if n_waves == 1:
+        ys, auxs = jax.vmap(route_group)(waves[0])
+        return ys.reshape(b, s, d), auxs.mean()
+    _, (ys, auxs) = jax.lax.scan(wave_step, None, waves)  # (W, B, g, d)
+    return ys.transpose(1, 0, 2, 3).reshape(b, s, d), auxs.mean()

@@ -1,0 +1,259 @@
+"""Model assembly: embeddings, scan-over-units layer stack, enc-dec, decode.
+
+The layer stack scans over pattern units with stacked params (leading dim =
+n_units) and `jax.checkpoint` on the unit body — compile-friendly HLO (one
+scan, not n_layers inlined bodies) and remat-bounded activation memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks as B
+from . import layers as L
+from .config import ModelConfig
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_unit(key, cfg: ModelConfig, with_cross: bool = False) -> Params:
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return {str(i): B.init_block(ks[i], cfg, bt, with_cross=with_cross)
+            for i, bt in enumerate(cfg.block_pattern)}
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "embed": 0.02 * jax.random.normal(
+            ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32),
+        "final_norm": L.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L._init(ks[1], (cfg.d_model, cfg.vocab_size))
+    unit_keys = jax.random.split(ks[2], cfg.n_units)
+    p["units"] = jax.vmap(
+        lambda k: _init_unit(k, cfg, with_cross=cfg.is_enc_dec))(unit_keys)
+    if cfg.tail_pattern:
+        tks = jax.random.split(ks[4], len(cfg.tail_pattern))
+        p["tail"] = {str(i): B.init_block(tks[i], cfg, bt,
+                                          with_cross=cfg.is_enc_dec)
+                     for i, bt in enumerate(cfg.tail_pattern)}
+    if cfg.is_enc_dec:
+        enc_cfg = cfg.with_overrides(block_pattern=("attn",),
+                                     n_layers=cfg.encoder_layers,
+                                     encoder_layers=0)
+        enc_keys = jax.random.split(ks[3], cfg.encoder_layers)
+        p["enc_units"] = jax.vmap(lambda k: _init_unit(k, enc_cfg))(enc_keys)
+        p["enc_final_norm"] = L.init_norm(cfg)
+    return p
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(seed))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _scan_units(units: Params, x: Array, cfg: ModelConfig, positions: Array,
+                *, causal: bool, enc_out: Optional[Array] = None,
+                enc_pos: Optional[Array] = None,
+                pattern: Optional[Tuple[str, ...]] = None,
+                remat: bool = True) -> Tuple[Array, Array]:
+    pattern = pattern or cfg.block_pattern
+
+    if cfg.bf16_weight_gather:
+        # cast the stacked params BEFORE the scan so the per-unit FSDP
+        # all-gather (at the scan's xs slice) moves bf16, not f32 — master
+        # f32 weights stay in the optimizer state; backward re-accumulates
+        # f32 through the cast. (Casting inside the body is too late: the
+        # gather sits at the slice — measured, see EXPERIMENTS.md §Perf 5.)
+        units = jax.tree_util.tree_map(
+            lambda p: p.astype(cfg.activation_dtype)
+            if p.dtype == jnp.float32 and p.ndim >= 3 else p, units)
+
+    def unit_fn(x, unit_params):
+        aux = jnp.zeros((), jnp.float32)
+        x = L.constrain_batch(x, cfg)
+        for i, bt in enumerate(pattern):
+            x, a = B.apply_block_train(unit_params[str(i)], x, cfg, bt,
+                                       positions, causal=causal,
+                                       enc_out=enc_out, enc_pos=enc_pos)
+            x = L.constrain_batch(x, cfg)
+            aux = aux + a
+        return x, aux
+
+    body = jax.checkpoint(unit_fn) if remat else unit_fn
+
+    def scan_body(carry, unit_params):
+        x, aux = carry
+        x, a = body(x, unit_params)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                               units)
+    return x, aux
+
+
+def embed_tokens(params: Params, tokens: Array, cfg: ModelConfig) -> Array:
+    return L.constrain_batch(
+        params["embed"].astype(cfg.activation_dtype)[tokens], cfg)
+
+
+def logits_from_hidden(params: Params, x: Array, cfg: ModelConfig) -> Array:
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    x = L.constrain_batch(x, cfg)
+    if cfg.tie_embeddings:
+        w = params["embed"].T.astype(x.dtype)
+    else:
+        w = params["head"].astype(x.dtype)
+    # vocab sharding propagates from the (divisibility-guarded) head weight
+    return (x @ w).astype(jnp.float32)
+
+
+def encode(params: Params, frames: Array, cfg: ModelConfig) -> Array:
+    """Encoder stack over precomputed frontend embeddings (B, S_enc, d)."""
+    b, s, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, _ = _scan_units(params["enc_units"], frames.astype(
+        cfg.activation_dtype), cfg, pos, causal=False, pattern=("attn",))
+    return L.apply_norm(params["enc_final_norm"], x, cfg)
+
+
+def forward(params: Params, batch: Dict[str, Array],
+            cfg: ModelConfig) -> Tuple[Array, Array]:
+    """Training/prefill forward. batch: tokens (B,S) [+ frames for enc-dec].
+
+    Returns (logits (B,S,V) fp32, aux loss).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed_tokens(params, tokens, cfg)
+    enc_out = enc_pos = None
+    if cfg.is_enc_dec:
+        enc_out = encode(params, batch["frames"], cfg)
+        t = enc_out.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None],
+                                   (b, t))
+    x, aux = _scan_units(params["units"], x, cfg, positions, causal=True,
+                         enc_out=enc_out, enc_pos=enc_pos)
+    for i, bt in enumerate(cfg.tail_pattern):
+        x, a = B.apply_block_train(params["tail"][str(i)], x, cfg, bt,
+                                   positions, causal=True,
+                                   enc_out=enc_out, enc_pos=enc_pos)
+        aux = aux + a
+    return logits_from_hidden(params, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    block_states: Any        # pytree stacked over units
+    pos: Array               # (B,) int32 next position to write
+    cross_kv: Any            # optional (n_units, ...) cross K/V
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=None, enc_out: Optional[Array] = None,
+                      params: Optional[Params] = None) -> DecodeState:
+    dtype = dtype or cfg.activation_dtype
+
+    def one_unit(_):
+        return {str(i): B.block_state_init(cfg, bt, batch, cache_len, dtype)
+                for i, bt in enumerate(cfg.block_pattern)}
+
+    states = jax.vmap(one_unit)(jnp.arange(cfg.n_units))
+    if cfg.tail_pattern:
+        tail = {str(i): B.block_state_init(cfg, bt, batch, cache_len, dtype)
+                for i, bt in enumerate(cfg.tail_pattern)}
+        states = {"units": states, "tail": tail}
+    cross_kv = None
+    if cfg.is_enc_dec and enc_out is not None and params is not None:
+        cross_kv = precompute_cross_kv(params, enc_out, cfg)
+    return DecodeState(block_states=states,
+                       pos=jnp.zeros((batch,), jnp.int32),
+                       cross_kv=cross_kv)
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                          with_cross_len: int = 0) -> Any:
+    """ShapeDtypeStruct decode state for the dry-run."""
+    def build():
+        st = init_decode_state(cfg, batch, cache_len)
+        if with_cross_len:
+            nkv, dh = cfg.n_kv_heads, cfg.head_dim
+            kv = jnp.zeros((cfg.n_units, batch, with_cross_len, nkv, dh),
+                           cfg.activation_dtype)
+            st = st._replace(cross_kv=(kv, kv))
+        return st
+
+    return jax.eval_shape(build)
+
+
+def precompute_cross_kv(params: Params, enc_out: Array,
+                        cfg: ModelConfig) -> Tuple[Array, Array]:
+    """Per-unit cross K/V from encoder output: (n_units, B, T, nkv, dh)."""
+    def per_unit(unit_params):
+        k, v, _ = B._cross_kv(unit_params["0"]["cross"], enc_out, cfg, None)
+        return k, v
+
+    return jax.vmap(per_unit)(params["units"])
+
+
+def decode_step(params: Params, state: DecodeState, tokens: Array,
+                cfg: ModelConfig) -> Tuple[Array, DecodeState]:
+    """tokens (B, 1) -> (logits (B, 1, V) fp32, new state)."""
+    x = L.constrain_batch(embed_tokens(params, tokens, cfg), cfg)
+
+    def scan_body(carry, unit_in):
+        x = carry
+        if state.cross_kv is not None:
+            unit_params, unit_state, (ck, cv) = unit_in
+        else:
+            unit_params, unit_state = unit_in
+            ck = cv = None
+        new_states = {}
+        for i, bt in enumerate(cfg.block_pattern):
+            cross = (ck, cv) if ck is not None else None
+            x, ns = B.apply_block_decode(unit_params[str(i)], x,
+                                         unit_state[str(i)], state.pos, cfg,
+                                         bt, cross_kv=cross)
+            new_states[str(i)] = ns
+        return x, new_states
+
+    has_tail = bool(cfg.tail_pattern)
+    unit_states = (state.block_states["units"] if has_tail
+                   else state.block_states)
+    xs = ((params["units"], unit_states, state.cross_kv)
+          if state.cross_kv is not None
+          else (params["units"], unit_states))
+    x, new_unit_states = jax.lax.scan(scan_body, x, xs)
+    if has_tail:
+        new_tail = {}
+        for i, bt in enumerate(cfg.tail_pattern):
+            x, ns = B.apply_block_decode(
+                params["tail"][str(i)], x, state.block_states["tail"][str(i)],
+                state.pos, cfg, bt)
+            new_tail[str(i)] = ns
+        new_block_states = {"units": new_unit_states, "tail": new_tail}
+    else:
+        new_block_states = new_unit_states
+    logits = logits_from_hidden(params, x, cfg)
+    return logits, state._replace(block_states=new_block_states,
+                                  pos=state.pos + 1)

@@ -1,0 +1,410 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM (mLSTM, sLSTM).
+
+TPU-native formulations:
+  * RG-LRU — elementwise linear recurrence ⇒ ``lax.associative_scan`` (log-depth
+    parallel prefix, full MXU-free VPU work, O(S·width) memory).
+  * mLSTM  — matrix-memory recurrence in *chunkwise-parallel* form: intra-chunk
+    attention-like einsums + inter-chunk state carry (exp-gate stabilised in
+    log space).  O(S/c) carried states keeps the backward pass feasible —
+    a sequential scan would have to stash a (dk×dv) matrix per step.
+  * sLSTM  — inherently sequential (hidden feeds gates); ``lax.scan`` over
+    time with block-diagonal per-head recurrent weights, input-side gates
+    precomputed in parallel.
+
+All three expose a single-token ``*_decode`` path with explicit state, used by
+serve_step (bounded state ⇒ these archs run the long_500k cell).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _init
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+CONV_WIDTH = 4
+LRU_C = 8.0          # Griffin's gate sharpness constant
+N_GATE_BLOCKS = 4    # block-diagonal gate projections
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal temporal conv (shared by rglru / mlstm branches)
+# ---------------------------------------------------------------------------
+
+def init_conv(key, width_channels: int) -> Params:
+    return {"w": _init(key, (CONV_WIDTH, width_channels), scale=0.5),
+            "b": jnp.zeros((width_channels,), jnp.float32)}
+
+
+def apply_conv(p: Params, x: Array) -> Array:
+    """x (B, S, C) -> causal depthwise conv, width CONV_WIDTH."""
+    dt = x.dtype
+    pads = jnp.pad(x, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+    out = sum(pads[:, i: i + x.shape[1], :] * p["w"][i].astype(dt)
+              for i in range(CONV_WIDTH))
+    return out + p["b"].astype(dt)
+
+
+def apply_conv_decode(p: Params, x_t: Array,
+                      cache: Array) -> Tuple[Array, Array]:
+    """x_t (B, C), cache (B, CONV_WIDTH-1, C) of previous inputs."""
+    dt = x_t.dtype
+    win = jnp.concatenate([cache, x_t[:, None, :]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", win, p["w"].astype(dt)) + p["b"].astype(dt)
+    return out, win[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, cfg: ModelConfig) -> Params:
+    d, w = cfg.d_model, cfg.lru_width
+    blk = w // N_GATE_BLOCKS
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": _init(ks[0], (d, w)),             # input branch
+        "w_y": _init(ks[1], (d, w)),             # gate branch (gelu)
+        "conv": init_conv(ks[2], w),
+        "gate_a": _init(ks[3], (N_GATE_BLOCKS, blk, blk)),   # recurrence gate
+        "gate_i": _init(ks[4], (N_GATE_BLOCKS, blk, blk)),   # input gate
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Λ init so a = sigmoid(Λ)^c spreads over (0.9, 0.999)
+        "lam": jnp.linspace(2.0, 6.0, w).astype(jnp.float32),
+        "w_out": _init(ks[5], (w, d)),
+    }
+
+
+def _block_diag_proj(x: Array, w: Array) -> Array:
+    """x (..., W) with W = NB*blk; w (NB, blk, blk)."""
+    nb, blk, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, blk)
+    return jnp.einsum("...nb,nbc->...nc", xs,
+                      w.astype(x.dtype)).reshape(x.shape)
+
+
+def _rglru_coeffs(p: Params, u: Array) -> Tuple[Array, Array]:
+    """u (B,S,W) post-conv input -> (a_t, b_t) of h_t = a_t h_{t-1} + b_t."""
+    r = jax.nn.sigmoid(_block_diag_proj(u, p["gate_a"]).astype(jnp.float32)
+                       + p["b_a"])
+    i = jax.nn.sigmoid(_block_diag_proj(u, p["gate_i"]).astype(jnp.float32)
+                       + p["b_i"])
+    log_a = -LRU_C * r * jax.nn.softplus(p["lam"])       # log a_t  (<= 0)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) in a numerically-safe form
+    gate = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = gate * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def apply_rglru(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    """Full-sequence RG-LRU block body (pre-norm residual handled by caller)."""
+    dt = x.dtype
+    y = jax.nn.gelu(x @ p["w_y"].astype(dt))
+    u = apply_conv(p["conv"], x @ p["w_x"].astype(dt))
+    a, b = _rglru_coeffs(p, u)
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return ((h.astype(dt) * y) @ p["w_out"].astype(dt))
+
+
+class RGLRUState(NamedTuple):
+    h: Array        # (B, W) fp32
+    conv: Array     # (B, CONV_WIDTH-1, W)
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width
+    return RGLRUState(h=jnp.zeros((batch, w), jnp.float32),
+                      conv=jnp.zeros((batch, CONV_WIDTH - 1, w), dtype))
+
+
+def apply_rglru_decode(p: Params, x_t: Array, state: RGLRUState,
+                       cfg: ModelConfig) -> Tuple[Array, RGLRUState]:
+    """x_t (B, d) -> (out (B, d), new state)."""
+    dt = x_t.dtype
+    y = jax.nn.gelu(x_t @ p["w_y"].astype(dt))
+    u_t, conv = apply_conv_decode(p["conv"], x_t @ p["w_x"].astype(dt),
+                                  state.conv)
+    a, b = _rglru_coeffs(p, u_t[:, None, :])
+    h = a[:, 0] * state.h + b[:, 0]
+    out = (h.astype(dt) * y) @ p["w_out"].astype(dt)
+    return out, RGLRUState(h=h, conv=conv)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    dm = int(d * cfg.mlstm_proj_factor)
+    ks = jax.random.split(key, 9)
+    h = cfg.n_heads
+    blk = dm // h
+    return {
+        "w_up": _init(ks[0], (d, dm)),
+        "w_z": _init(ks[1], (d, dm)),            # output-gate branch
+        "conv": init_conv(ks[2], dm),
+        # q/k/v are block-diagonal per head (xLSTM's BlockDiagonal linear)
+        "w_q": _init(ks[3], (h, blk, blk), scale=1.0 / blk ** 0.5),
+        "w_k": _init(ks[4], (h, blk, blk), scale=1.0 / blk ** 0.5),
+        "w_v": _init(ks[5], (h, blk, blk), scale=1.0 / blk ** 0.5),
+        "w_i": _init(ks[6], (dm, cfg.n_heads), scale=0.02),
+        "w_f": _init(ks[7], (dm, cfg.n_heads), scale=0.02),
+        "b_i": jnp.zeros((cfg.n_heads,), jnp.float32),
+        "b_f": 3.0 * jnp.ones((cfg.n_heads,), jnp.float32),  # open forget gates
+        "w_down": _init(ks[8], (dm, d)),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: Array        # (B, H, dk, dv) fp32, scale-free (true C = c * exp(m))
+    n: Array        # (B, H, dk) fp32
+    m: Array        # (B, H) fp32 log-stabiliser
+    conv: Array     # (B, CONV_WIDTH-1, dm)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    dm = int(cfg.d_model * cfg.mlstm_proj_factor)
+    h = cfg.n_heads
+    dk = dm // h
+    return MLSTMState(
+        c=jnp.zeros((batch, h, dk, dk), jnp.float32),
+        n=jnp.zeros((batch, h, dk), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, CONV_WIDTH - 1, dm), dtype))
+
+
+def _head_proj(x: Array, w: Array) -> Array:
+    """Block-diagonal per-head projection: (..., dm) × (H, blk, blk) ->
+    (..., H, blk)."""
+    h, blk, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], h, blk)
+    return jnp.einsum("...hb,hbc->...hc", xs, w.astype(x.dtype))
+
+
+def _mlstm_qkv_gates(p: Params, x: Array, cfg: ModelConfig):
+    dt = x.dtype
+    h = cfg.n_heads
+    u = x @ p["w_up"].astype(dt)
+    z = x @ p["w_z"].astype(dt)
+    c = jax.nn.silu(apply_conv(p["conv"], u))
+    b, s, dm = u.shape
+    dk = dm // h
+    q = _head_proj(c, p["w_q"]).transpose(0, 2, 1, 3)    # (B,H,S,dk)
+    k = _head_proj(c, p["w_k"]).transpose(0, 2, 1, 3) / (dk ** 0.5)
+    v = _head_proj(u, p["w_v"]).transpose(0, 2, 1, 3)
+    log_i = (c.astype(jnp.float32) @ p["w_i"] + p["b_i"]).transpose(0, 2, 1)
+    log_f = jax.nn.log_sigmoid(
+        (c.astype(jnp.float32) @ p["w_f"] + p["b_f"])).transpose(0, 2, 1)
+    return q, k, v, log_i, log_f, z                      # logs: (B,H,S)
+
+
+def apply_mlstm(p: Params, x: Array, cfg: ModelConfig,
+                chunk: Optional[int] = None) -> Array:
+    """Full-sequence mLSTM block body, chunkwise-parallel, log-stabilised.
+
+    Chunk size trades carried-state traffic (∝ S/c · dk²) against intra-chunk
+    score matrices (∝ S/c · c²) — balanced at c ≈ dk (§Perf iteration log).
+    Carried C/N can be bf16 (cfg.mlstm_state_dtype); the log-stabiliser m
+    stays f32.
+    """
+    b, s, d = x.shape
+    dt = x.dtype
+    nh = cfg.n_heads
+    sdt = jnp.dtype(cfg.mlstm_state_dtype)
+    q, k, v, log_i, log_f, z = _mlstm_qkv_gates(p, x, cfg)
+    dk = q.shape[-1]
+    c_len = min(chunk or cfg.mlstm_chunk, s)
+    assert s % c_len == 0, (s, c_len)
+    nc = s // c_len
+
+    def to_chunks(a, trailing):
+        return a.reshape(b, nh, nc, c_len, *trailing).transpose(
+            2, 0, 1, 3, *range(4, 4 + len(trailing)))
+
+    qc = to_chunks(q, (dk,))
+    kc = to_chunks(k, (dk,))
+    vc = to_chunks(v, (dk,))
+    lic = to_chunks(log_i, ())
+    lfc = to_chunks(log_f, ())
+
+    state0 = (jnp.zeros((b, nh, dk, dk), sdt),
+              jnp.zeros((b, nh, dk), sdt),
+              jnp.full((b, nh), -1e30, jnp.float32))
+
+    def chunk_step(carry, inp):
+        C, N, m = carry
+        C = C.astype(jnp.float32)
+        N = N.astype(jnp.float32)
+        qb, kb, vb, li, lf = inp                       # (B,H,c,·)
+        F = jnp.cumsum(lf, axis=-1)                    # (B,H,c) Σ_{l<=i} log f
+        # intra logits l_ij = F_i - F_j + li_j  (j <= i)
+        lmat = F[..., :, None] - F[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((c_len, c_len), bool))
+        lmat = jnp.where(tri, lmat, -jnp.inf)
+        a_i = lmat.max(-1)                             # (B,H,c)
+        e_i = F + m[..., None]                         # inter exponent
+        m_i = jnp.maximum(a_i, e_i)
+        w_intra = jnp.exp(lmat - m_i[..., None])       # (B,H,c,c)
+        w_inter = jnp.exp(e_i - m_i)                   # (B,H,c)
+        scores = jnp.einsum("bhik,bhjk->bhij", qb.astype(jnp.float32),
+                            kb.astype(jnp.float32)) * w_intra
+        h_num = jnp.einsum("bhij,bhjv->bhiv", scores, vb.astype(jnp.float32))
+        h_num += w_inter[..., None] * jnp.einsum(
+            "bhik,bhkv->bhiv", qb.astype(jnp.float32), C)
+        n_vec = jnp.einsum("bhij,bhjk->bhik", w_intra, kb.astype(jnp.float32))
+        n_vec += w_inter[..., None] * N[:, :, None, :]
+        qn = jnp.einsum("bhik,bhik->bhi", qb.astype(jnp.float32), n_vec)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_i))
+        h = h_num / denom[..., None]                   # (B,H,c,dv)
+        # state update to end of chunk
+        last = F[..., -1:]
+        l_end = last - F + li                          # (B,H,c)
+        m_new = jnp.maximum(last[..., 0] + m, l_end.max(-1))
+        w_end = jnp.exp(l_end - m_new[..., None])
+        C_new = (jnp.exp(last[..., 0] + m - m_new)[..., None, None] * C
+                 + jnp.einsum("bhj,bhjk,bhjv->bhkv", w_end,
+                              kb.astype(jnp.float32), vb.astype(jnp.float32)))
+        N_new = (jnp.exp(last[..., 0] + m - m_new)[..., None] * N
+                 + jnp.einsum("bhj,bhjk->bhk", w_end, kb.astype(jnp.float32)))
+        return (C_new.astype(sdt), N_new.astype(sdt), m_new), h
+
+    _, hs = jax.lax.scan(chunk_step, state0, (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(b, nh, s, dk)
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, nh * dk).astype(dt)
+    out = (h * jax.nn.silu(z)) @ p["w_down"].astype(dt)
+    return out
+
+
+def apply_mlstm_decode(p: Params, x_t: Array, state: MLSTMState,
+                       cfg: ModelConfig) -> Tuple[Array, MLSTMState]:
+    """x_t (B, d) single-token mLSTM step."""
+    b, d = x_t.shape
+    dt = x_t.dtype
+    nh = cfg.n_heads
+    dm = int(d * cfg.mlstm_proj_factor)
+    u = x_t @ p["w_up"].astype(dt)
+    z = x_t @ p["w_z"].astype(dt)
+    cin, conv = apply_conv_decode(p["conv"], u, state.conv)
+    cin = jax.nn.silu(cin)
+    dk = dm // nh
+    q = _head_proj(cin, p["w_q"])                        # (B,H,dk)
+    k = _head_proj(cin, p["w_k"]) / (dk ** 0.5)
+    v = _head_proj(u, p["w_v"])
+    log_i = (cin.astype(jnp.float32) @ p["w_i"] + p["b_i"])   # (B,H)
+    log_f = jax.nn.log_sigmoid(cin.astype(jnp.float32) @ p["w_f"] + p["b_f"])
+
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    w_prev = jnp.exp(log_f + state.m - m_new)
+    w_in = jnp.exp(log_i - m_new)
+    C = (w_prev[..., None, None] * state.c
+         + w_in[..., None, None] * jnp.einsum(
+             "bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32)))
+    N = w_prev[..., None] * state.n + w_in[..., None] * k.astype(jnp.float32)
+    qn = jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), N)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    h = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), C) / denom[..., None]
+    h = h.reshape(b, nh * dk).astype(dt)
+    out = (h * jax.nn.silu(z)) @ p["w_down"].astype(dt)
+    return out, MLSTMState(c=C, n=N, m=m_new, conv=conv)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — sequential scan, block-diagonal per-head recurrence
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    blk = d // h
+    ds = int(d * cfg.slstm_proj_factor)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": _init(ks[0], (d, 4 * d)),                 # i,f,z,o input paths
+        "r": _init(ks[1], (4, h, blk, blk), scale=1.0 / blk ** 0.5),
+        "b": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "w_ff1": _init(ks[2], (d, ds)),
+        "w_ff2": _init(ks[3], (ds, d)),
+        "ffn_norm": jnp.ones((d,), jnp.float32),
+    }
+
+
+class SLSTMState(NamedTuple):
+    h: Array   # (B, d)
+    c: Array   # (B, d)
+    n: Array   # (B, d)
+    m: Array   # (B, d)
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(h=z(), c=z(), n=z(), m=jnp.full((batch, d), -1e30))
+
+
+def _slstm_cell(p: Params, gates_x: Array, state: SLSTMState,
+                nh: int) -> Tuple[Array, SLSTMState]:
+    """gates_x (B, 4d) precomputed input-side gates for one step."""
+    b, d4 = gates_x.shape
+    d = d4 // 4
+    blk = d // nh
+    h_heads = state.h.reshape(b, nh, blk)
+    rec = jnp.einsum("bnk,gnkl->bgnl", h_heads, p["r"]).reshape(b, 4 * d)
+    pre = gates_x.astype(jnp.float32) + rec + p["b"]
+    gi, gf, gz, go = jnp.split(pre, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + state.m, gi)
+    i_p = jnp.exp(gi - m_new)
+    f_p = jnp.exp(log_f + state.m - m_new)
+    c = f_p * state.c + i_p * jnp.tanh(gz)
+    n = f_p * state.n + i_p
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    return h, SLSTMState(h=h, c=c, n=n, m=m_new)
+
+
+def apply_slstm(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    """Full-sequence sLSTM body (sequential scan) + post-FFN."""
+    b, s, d = x.shape
+    dt = x.dtype
+    gates_x = x @ p["w_in"].astype(dt)                    # (B,S,4d) parallel
+
+    def step(state, g_t):
+        h, new = _slstm_cell(p, g_t, state, cfg.n_heads)
+        return new, h
+
+    _, hs = jax.lax.scan(step, slstm_init_state(cfg, b),
+                         gates_x.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(dt)                  # (B,S,d)
+    # post FFN (gelu), pre-normed on h
+    ms = jnp.mean(jnp.square(h.astype(jnp.float32)), -1, keepdims=True)
+    hn = (h.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+          * p["ffn_norm"]).astype(dt)
+    return h + jax.nn.gelu(hn @ p["w_ff1"].astype(dt)) @ p["w_ff2"].astype(dt)
+
+
+def apply_slstm_decode(p: Params, x_t: Array, state: SLSTMState,
+                       cfg: ModelConfig) -> Tuple[Array, SLSTMState]:
+    dt = x_t.dtype
+    g = x_t @ p["w_in"].astype(dt)
+    h, new_state = _slstm_cell(p, g, state, cfg.n_heads)
+    h = h.astype(dt)
+    ms = jnp.mean(jnp.square(h.astype(jnp.float32)), -1, keepdims=True)
+    hn = (h.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+          * p["ffn_norm"]).astype(dt)
+    out = h + jax.nn.gelu(hn @ p["w_ff1"].astype(dt)) @ p["w_ff2"].astype(dt)
+    return out, new_state

@@ -1,0 +1,90 @@
+"""Train / serve step factories — the functions the launcher jits and shards.
+
+train_step: CE loss (fp32 logsumexp) + MoE aux + AdamW.  serve_step: one
+decode step over a KV/recurrent-state cache.  Both are pure functions of
+(state, batch) so pjit in/out shardings apply directly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import adamw
+from .config import ModelConfig
+from .model import DecodeState, decode_step, forward
+
+Array = jax.Array
+
+MOE_AUX_WEIGHT = 0.01
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def cross_entropy(logits: Array, targets: Array, mask: Array) -> Array:
+    """Mean CE over mask; logits fp32 (B, S, V)."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    return ce.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch) -> Tuple[Array, Dict[str, Array]]:
+        logits, aux = forward(params, batch, cfg)
+        mask = batch.get("segment_ids",
+                         jnp.ones_like(batch["targets"])).astype(jnp.float32)
+        ce = cross_entropy(logits, batch["targets"], mask)
+        loss = ce + MOE_AUX_WEIGHT * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        params, opt, gnorm = adamw.apply_updates(
+            state.params, grads, state.opt, opt_cfg)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       step=opt.step.astype(jnp.float32))
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, *, greedy: bool = True,
+                    temperature: float = 1.0):
+    def serve_step(params, state: DecodeState, tokens: Array
+                   ) -> Tuple[Array, DecodeState]:
+        """tokens (B, 1) current token -> (next_token (B, 1), new state)."""
+        logits, new_state = decode_step(params, state, tokens, cfg)
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1)
+        else:
+            key = jax.random.fold_in(jax.random.PRNGKey(0), state.pos[0])
+            nxt = jax.random.categorical(key, logits[:, -1, :] / temperature)
+        return nxt[:, None].astype(jnp.int32), new_state
+
+    return serve_step
+
+
+def init_train_state(key, cfg: ModelConfig) -> TrainState:
+    from .model import init_params
+    params = init_params(key, cfg)
+    return TrainState(params=params, opt=adamw.init(params))
+
+
+def abstract_train_state(cfg: ModelConfig) -> TrainState:
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg), jax.random.PRNGKey(0))

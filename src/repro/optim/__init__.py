@@ -1,0 +1,5 @@
+"""Optimizers."""
+
+from .adamw import AdamWConfig, AdamWState, apply_updates, global_norm, init, make_schedule
+from .compression import (compress_decompress, compression_ratio,
+                          init_error_feedback)

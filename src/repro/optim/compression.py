@@ -1,0 +1,70 @@
+"""Gradient compression with error feedback — distributed-optimization trick
+for DCN-limited multi-pod training (DESIGN.md §6).
+
+The cross-pod gradient all-reduce is the only DCN traffic in the
+(pod, data, model) layout; int8 quantization cuts it 4x.  Deterministic
+per-leaf symmetric quantization (scale = max|g|/127) is biased, so an
+error-feedback accumulator carries the residual into the next step (EF-SGD:
+Seide et al. / Karimireddy et al.) — convergence matches uncompressed SGD on
+convex probes (tests/test_infra.py::TestGradCompression).
+
+Usage (launch/train.py --grad-compress):
+    ef = init_error_feedback(params)
+    grads_c, ef = compress_decompress(grads, ef)   # wire format boundary
+    ... apply_updates(params, grads_c, ...)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def init_error_feedback(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def quantize_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8: returns (codes int8, scale f32 scalar)."""
+    g = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_leaf(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads: PyTree, ef: PyTree) -> Tuple[PyTree, PyTree]:
+    """int8 round-trip with error feedback.
+
+    Returns (dequantized grads — what the receiving side applies,
+             new error-feedback state = what the wire dropped).
+    In a real deployment the int8 codes are what crosses DCN; jit'd
+    end-to-end the quant/dequant pair IS the wire boundary.
+    """
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        codes, scale = quantize_leaf(target)
+        deq = dequantize_leaf(codes, scale)
+        return deq, target - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def compression_ratio(grads: PyTree) -> float:
+    """fp32 bytes / (int8 codes + scales) — the DCN saving."""
+    f32 = sum(l.size * 4 for l in jax.tree_util.tree_leaves(grads))
+    i8 = sum(l.size * 1 + 4 for l in jax.tree_util.tree_leaves(grads))
+    return f32 / i8

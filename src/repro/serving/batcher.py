@@ -1,0 +1,137 @@
+"""Request batching + straggler-tolerant fan-out for serving.
+
+The paper's Query Processing module, production-shaped:
+  * `RequestBatcher` — collects single queries into fixed-size padded batches
+    (deadline-bounded, so tail latency is capped even at low QPS)
+  * `QuorumFanout` — sends a search to every corpus shard and merges what
+    returns within the deadline; slow shards degrade recall instead of
+    blocking the query (degraded-read straggler mitigation, DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    query: np.ndarray
+    k: int
+    future: "Future"
+    enqueued_at: float
+
+
+class Future:
+    def __init__(self):
+        self._ev = threading.Event()
+        self._value = None
+
+    def set(self, value):
+        self._value = value
+        self._ev.set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._ev.wait(timeout):
+            raise TimeoutError("request timed out")
+        return self._value
+
+
+class RequestBatcher:
+    """Pads/batches requests; flushes on max_batch or max_wait_ms."""
+
+    def __init__(self, search_fn: Callable[[np.ndarray, int], Tuple],
+                 max_batch: int = 32, max_wait_ms: float = 5.0):
+        self._search = search_fn
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self._q: "queue.Queue[Optional[Request]]" = queue.Queue()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._running = True
+        self.batches_served = 0
+        self.requests_served = 0
+        self._thread.start()
+
+    def submit(self, query: np.ndarray, k: int) -> Future:
+        fut = Future()
+        self._q.put(Request(np.asarray(query, np.float32), k, fut,
+                            time.perf_counter()))
+        return fut
+
+    def close(self):
+        self._running = False
+        self._q.put(None)
+        self._thread.join(timeout=2)
+
+    def _loop(self):
+        while self._running:
+            first = self._q.get()
+            if first is None:
+                return
+            batch = [first]
+            deadline = time.perf_counter() + self.max_wait
+            while len(batch) < self.max_batch:
+                left = deadline - time.perf_counter()
+                if left <= 0:
+                    break
+                try:
+                    nxt = self._q.get(timeout=left)
+                except queue.Empty:
+                    break
+                if nxt is None:
+                    self._running = False
+                    break
+                batch.append(nxt)
+            k = max(r.k for r in batch)
+            queries = np.stack([r.query for r in batch])
+            d, ids = self._search(queries, k)
+            d, ids = np.asarray(d), np.asarray(ids)
+            for i, r in enumerate(batch):
+                r.future.set((d[i, : r.k], ids[i, : r.k]))
+            self.batches_served += 1
+            self.requests_served += len(batch)
+
+
+class QuorumFanout:
+    """Fan a query out to per-shard searchers; merge whatever answers within
+    the deadline (min_quorum shards required, else TimeoutError)."""
+
+    def __init__(self, shard_search_fns: Sequence[Callable],
+                 deadline_ms: float = 50.0, min_quorum: int = 1):
+        self.fns = list(shard_search_fns)
+        self.deadline = deadline_ms / 1e3
+        self.min_quorum = min_quorum
+        self.last_responders = 0
+
+    def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        results: List[Optional[Tuple]] = [None] * len(self.fns)
+
+        def run(i):
+            try:
+                results[i] = self.fns[i](queries, k)
+            except Exception:
+                results[i] = None
+
+        threads = [threading.Thread(target=run, args=(i,), daemon=True)
+                   for i in range(len(self.fns))]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            left = self.deadline - (time.perf_counter() - t0)
+            t.join(max(left, 0))
+        got = [r for r in results if r is not None]
+        self.last_responders = len(got)
+        if len(got) < self.min_quorum:
+            raise TimeoutError(
+                f"only {len(got)}/{len(self.fns)} shards answered")
+        all_d = np.concatenate([np.asarray(d) for d, _ in got], axis=1)
+        all_i = np.concatenate([np.asarray(i) for _, i in got], axis=1)
+        order = np.argsort(all_d, axis=1, kind="stable")[:, :k]
+        return (np.take_along_axis(all_d, order, axis=1),
+                np.take_along_axis(all_i, order, axis=1))

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# src layout + repo root (benchmarks/) importable without install
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (os.path.join(_ROOT, "src"), _ROOT):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+# tests must see exactly the real device count (dryrun sets 512 in ITS process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

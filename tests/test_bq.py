@@ -1,0 +1,88 @@
+"""Binary quantization: packing, Hamming search, LSH recall behaviour."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BinaryQuantizer, BQConfig, exact_knn
+from repro.core.bq import hamming_distances, pack_bits, unpack_bits
+from repro.data.synthetic import gaussian_mixture
+
+
+class TestPacking:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 20), st.integers(1, 4), st.integers(0, 10_000))
+    def test_pack_unpack_roundtrip(self, n, words, seed):
+        bits = words * 32
+        raw = (np.random.RandomState(seed).rand(n, bits) > 0.5) \
+            .astype(np.uint32)
+        packed = pack_bits(jnp.asarray(raw))
+        assert packed.shape == (n, words)
+        back = np.asarray(unpack_bits(packed, bits))
+        assert (back == raw).all()
+
+    def test_hamming_equals_unpacked_xor(self):
+        rng = np.random.RandomState(1)
+        a = (rng.rand(5, 64) > 0.5).astype(np.uint32)
+        b = (rng.rand(9, 64) > 0.5).astype(np.uint32)
+        pa, pb = pack_bits(jnp.asarray(a)), pack_bits(jnp.asarray(b))
+        got = np.asarray(hamming_distances(pa, pb))
+        want = (a[:, None, :] != b[None, :, :]).sum(-1)
+        assert (got == want).all()
+
+
+class TestBQ:
+    def test_bits_must_be_multiple_of_32(self):
+        with pytest.raises(ValueError):
+            BinaryQuantizer(BQConfig(bits=100))
+
+    def test_recall_improves_with_bits(self):
+        x = gaussian_mixture(1200, 48, n_clusters=12, scale=0.15, seed=0)
+        q = gaussian_mixture(24, 48, n_clusters=12, scale=0.15, seed=5)
+        gt = exact_knn(q, x, 10, metric="cosine")
+
+        def recall(bits):
+            bq = BinaryQuantizer(BQConfig(bits=bits))
+            bq.train(jnp.asarray(x))
+            codes = bq.encode(jnp.asarray(x))
+            _, ids = bq.search(codes, jnp.asarray(q), 10)
+            return np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                            for a, b in zip(np.asarray(ids), gt)])
+
+        r64, r512 = recall(64), recall(512)
+        assert r512 > r64, (r64, r512)
+        assert r512 > 0.5, r512
+
+    def test_hamming_correlates_with_cosine(self):
+        """LSH property: E[hamming] is monotone in angle."""
+        x = gaussian_mixture(400, 32, n_clusters=8, scale=0.2, seed=2)
+        bq = BinaryQuantizer(BQConfig(bits=256))
+        bq.train(jnp.asarray(x))
+        codes = np.asarray(bq.encode(jnp.asarray(x)))
+        ham = np.asarray(hamming_distances(
+            jnp.asarray(codes[:50]), jnp.asarray(codes)))
+        xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+        cos = 1.0 - xn[:50] @ xn.T
+        corr = np.corrcoef(ham.ravel(), cos.ravel())[0, 1]
+        assert corr > 0.8, corr
+
+    def test_compression_ratio(self):
+        bq = BinaryQuantizer(BQConfig(bits=256))
+        assert bq.compression_ratio(128) == 16.0   # 512B -> 32B
+
+    def test_state_dict_roundtrip(self):
+        x = gaussian_mixture(200, 32, seed=3)
+        bq = BinaryQuantizer(BQConfig(bits=64))
+        bq.train(jnp.asarray(x))
+        bq2 = BinaryQuantizer(BQConfig(bits=64))
+        bq2.load_state_dict(bq.state_dict())
+        c1 = np.asarray(bq.encode(jnp.asarray(x[:10])))
+        c2 = np.asarray(bq2.encode(jnp.asarray(x[:10])))
+        assert (c1 == c2).all()
+
+    def test_pca_rotation_variant(self):
+        x = gaussian_mixture(300, 24, seed=4)
+        bq = BinaryQuantizer(BQConfig(bits=32, pca_rotate=True))
+        bq.train(jnp.asarray(x))
+        assert bq.hyperplanes.shape == (32, 24)

@@ -1,0 +1,87 @@
+"""Metric registry correctness + invariance properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distances as D
+
+RNG = np.random.RandomState(0)
+
+
+def _rand(n, d, seed=0):
+    return np.random.RandomState(seed).randn(n, d).astype(np.float32)
+
+
+class TestMetrics:
+    def test_l2_matches_numpy(self):
+        q, x = _rand(7, 33, 1), _rand(19, 33, 2)
+        got = np.asarray(D.pairwise_l2(jnp.asarray(q), jnp.asarray(x)))
+        want = ((q[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_cosine_range_and_self_distance(self):
+        x = _rand(11, 16)
+        d = np.asarray(D.pairwise_cosine(jnp.asarray(x), jnp.asarray(x)))
+        assert (d > -1e-5).all() and (d < 2 + 1e-5).all()
+        np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-5)
+
+    def test_dot_is_negative_inner_product(self):
+        q, x = _rand(3, 8), _rand(5, 8)
+        got = np.asarray(D.pairwise_dot(jnp.asarray(q), jnp.asarray(x)))
+        np.testing.assert_allclose(got, -(q @ x.T), rtol=1e-5, atol=1e-5)
+
+    def test_hamming_exact(self):
+        q = np.array([[0b1011, 0b0001]], dtype=np.uint32)
+        x = np.array([[0b1000, 0b0001], [0b0100, 0b0000]], dtype=np.uint32)
+        d = np.asarray(D.pairwise_hamming(jnp.asarray(q), jnp.asarray(x)))
+        # q^x0 = [0b0011, 0b0000] -> 2 bits; q^x1 = [0b1111, 0b0001] -> 5
+        assert d.tolist() == [[2, 5]]
+
+    def test_registry(self):
+        assert set(D.available_metrics()) >= {"l2", "cosine", "dot", "hamming"}
+        with pytest.raises(ValueError):
+            D.get_metric("nope")
+
+    def test_brute_force_topk_sorted_ascending(self):
+        q, x = _rand(4, 12), _rand(50, 12)
+        d, idx = D.brute_force_topk(jnp.asarray(q), jnp.asarray(x), 5, "l2")
+        d = np.asarray(d)
+        assert (np.diff(d, axis=1) >= -1e-6).all()
+        # indices consistent with distances
+        full = ((q[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+        np.testing.assert_allclose(
+            d, np.take_along_axis(full, np.asarray(idx), axis=1),
+            rtol=1e-4, atol=1e-4)
+
+
+class TestProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 8), st.integers(2, 24), st.integers(0, 10_000))
+    def test_l2_symmetry_and_triangle_of_zero(self, q, d, seed):
+        x = np.random.RandomState(seed).randn(q, d).astype(np.float32)
+        dist = np.asarray(D.pairwise_l2(jnp.asarray(x), jnp.asarray(x)))
+        np.testing.assert_allclose(dist, dist.T, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.diag(dist), 0.0, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_cosine_scale_invariance(self, seed):
+        rng = np.random.RandomState(seed)
+        q = rng.randn(3, 9).astype(np.float32)
+        x = rng.randn(5, 9).astype(np.float32)
+        d1 = np.asarray(D.pairwise_cosine(jnp.asarray(q), jnp.asarray(x)))
+        d2 = np.asarray(D.pairwise_cosine(jnp.asarray(q * 7.5),
+                                          jnp.asarray(x * 0.3)))
+        np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_hamming_symmetric_and_bounded(self, seed):
+        rng = np.random.RandomState(seed)
+        c = rng.randint(0, 2 ** 31, (6, 4)).astype(np.uint32)
+        d = np.asarray(D.pairwise_hamming(jnp.asarray(c), jnp.asarray(c)))
+        assert (d == d.T).all()
+        assert (np.diag(d) == 0).all()
+        assert d.max() <= 4 * 32

@@ -1,0 +1,192 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode.
+
+Every kernel is executed with interpret=True (kernel body evaluated on CPU)
+and asserted allclose against ref.py — the correctness contract required for
+each kernel (assignment deliverable c).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.hamming import hamming_kernel
+from repro.kernels.l2 import l2_distance_kernel
+from repro.kernels.pq_adc import pq_adc_kernel
+
+RNG = np.random.RandomState(0)
+
+
+class TestL2Kernel:
+    @pytest.mark.parametrize("q,n,d", [
+        (8, 128, 64),         # tile-aligned
+        (7, 300, 130),        # padding on every axis
+        (64, 1024, 784),      # fashion-mnist dims
+        (1, 33, 128),         # single query, sift dims
+        (3, 50, 16),          # tiny
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, q, n, d, dtype):
+        qs = jnp.asarray(RNG.randn(q, d), dtype)
+        xs = jnp.asarray(RNG.randn(n, d), dtype)
+        got = l2_distance_kernel(qs, xs, tq=16, tn=128, tk=64, interpret=True)
+        want = ref.l2_distance_ref(qs, xs)
+        tol = 2e-4 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("q,n,d", [(9, 200, 96), (16, 128, 128)])
+    def test_dot_mode(self, q, n, d):
+        qs = jnp.asarray(RNG.randn(q, d), jnp.float32)
+        xs = jnp.asarray(RNG.randn(n, d), jnp.float32)
+        got = l2_distance_kernel(qs, xs, mode="dot", tq=8, tn=64, tk=32,
+                                 interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.dot_distance_ref(qs, xs)),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_tile_shape_independence(self):
+        """Result must not depend on the BlockSpec tiling chosen."""
+        qs = jnp.asarray(RNG.randn(13, 70), jnp.float32)
+        xs = jnp.asarray(RNG.randn(111, 70), jnp.float32)
+        a = l2_distance_kernel(qs, xs, tq=4, tn=32, tk=16, interpret=True)
+        b = l2_distance_kernel(qs, xs, tq=16, tn=256, tk=70, interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestPQADCKernel:
+    @pytest.mark.parametrize("q,n,m,k", [
+        (5, 700, 8, 64),
+        (2, 100, 16, 256),    # uint8 full range
+        (9, 333, 4, 16),      # fast-scan-like small k
+        (1, 64, 32, 256),
+    ])
+    def test_matches_ref(self, q, n, m, k):
+        lut = jnp.asarray(RNG.rand(q, m, k), jnp.float32)
+        codes = jnp.asarray(RNG.randint(0, k, (n, m)), jnp.uint8)
+        got = pq_adc_kernel(lut, codes, tq=4, tn=256, interpret=True)
+        want = ref.pq_adc_ref(lut, codes)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_uint16_codes(self):
+        lut = jnp.asarray(RNG.rand(2, 4, 512), jnp.float32)
+        codes = jnp.asarray(RNG.randint(0, 512, (50, 4)), jnp.uint16)
+        got = pq_adc_kernel(lut, codes, interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.pq_adc_ref(lut, codes)),
+                                   rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 6), st.integers(10, 80), st.integers(1, 3),
+           st.integers(0, 1000))
+    def test_property_sweep(self, q, n, m_exp, seed):
+        m = 2 ** m_exp
+        rng = np.random.RandomState(seed)
+        lut = jnp.asarray(rng.rand(q, m, 16), jnp.float32)
+        codes = jnp.asarray(rng.randint(0, 16, (n, m)), jnp.uint8)
+        got = pq_adc_kernel(lut, codes, tq=2, tn=128, m_chunk=2,
+                            interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.pq_adc_ref(lut, codes)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestHammingKernel:
+    @pytest.mark.parametrize("q,n,w", [
+        (5, 700, 8), (33, 129, 4), (2, 50, 16), (1, 1, 1),
+    ])
+    def test_matches_ref(self, q, n, w):
+        qc = jnp.asarray(RNG.randint(0, 2 ** 31, (q, w)), jnp.uint32)
+        xc = jnp.asarray(RNG.randint(0, 2 ** 31, (n, w)), jnp.uint32)
+        got = hamming_kernel(qc, xc, tq=16, tn=128, interpret=True)
+        want = ref.hamming_ref(qc, xc)
+        assert (np.asarray(got) == np.asarray(want)).all()
+
+    def test_all_ones_and_zeros(self):
+        z = jnp.zeros((3, 4), jnp.uint32)
+        o = jnp.full((5, 4), 0xFFFFFFFF, jnp.uint32)
+        got = np.asarray(hamming_kernel(z, o, interpret=True))
+        assert (got == 128).all()
+
+
+class TestSLSTMKernel:
+    """Fused weight-resident sLSTM kernel vs the scan oracle (§Perf 4.4)."""
+
+    @pytest.mark.parametrize("b,s,d,h,chunk", [
+        (2, 64, 32, 4, 16),
+        (1, 32, 16, 2, 32),     # single chunk
+        (3, 96, 64, 8, 24),
+    ])
+    def test_matches_ref(self, b, s, d, h, chunk):
+        from repro.kernels.slstm import slstm_sequence_kernel
+        rng = np.random.RandomState(b + s)
+        blk = d // h
+        gates = jnp.asarray(rng.randn(b, s, 4 * d), jnp.float32)
+        r = jnp.asarray(0.3 * rng.randn(4, h, blk, blk), jnp.float32)
+        bias = jnp.asarray(rng.randn(4 * d), jnp.float32)
+        got = slstm_sequence_kernel(gates, r, bias, n_heads=h, chunk=chunk,
+                                    interpret=True)
+        want = ref.slstm_sequence_ref(gates, r, bias, n_heads=h)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_chunk_invariance(self):
+        from repro.kernels.slstm import slstm_sequence_kernel
+        rng = np.random.RandomState(7)
+        gates = jnp.asarray(rng.randn(2, 48, 64), jnp.float32)
+        r = jnp.asarray(0.3 * rng.randn(4, 4, 4, 4), jnp.float32)
+        bias = jnp.asarray(rng.randn(64), jnp.float32)
+        a = slstm_sequence_kernel(gates, r, bias, n_heads=4, chunk=12,
+                                  interpret=True)
+        b = slstm_sequence_kernel(gates, r, bias, n_heads=4, chunk=48,
+                                  interpret=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_matches_model_cell(self):
+        """The kernel's semantics == the model's recurrent cell."""
+        from repro.kernels.slstm import slstm_sequence_kernel
+        from repro.models.config import ModelConfig
+        from repro.models.recurrent import (_slstm_cell, init_slstm,
+                                            slstm_init_state)
+        import jax
+        cfg = ModelConfig(name="t", family="ssm", n_layers=2, d_model=32,
+                          n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=16,
+                          block_pattern=("slstm", "slstm"))
+        p = init_slstm(jax.random.PRNGKey(0), cfg)
+        gates = jnp.asarray(RNG.randn(2, 24, 128), jnp.float32)
+        state = slstm_init_state(cfg, 2)
+        hs = []
+        for t in range(24):
+            h, state = _slstm_cell(p, gates[:, t], state, 4)
+            hs.append(h)
+        want = jnp.stack(hs, axis=1)
+        got = slstm_sequence_kernel(gates, p["r"], p["b"], n_heads=4,
+                                    chunk=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+
+class TestOpsDispatch:
+    def test_force_ref_matches_kernel(self):
+        qs = jnp.asarray(RNG.randn(4, 32), jnp.float32)
+        xs = jnp.asarray(RNG.randn(40, 32), jnp.float32)
+        a = ops.l2_distances(qs, xs, force_ref=True)
+        b = ops.l2_distances(qs, xs, force_ref=False, tq=4, tn=32, tk=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_all_ops_callable(self):
+        qs = jnp.asarray(RNG.randn(2, 16), jnp.float32)
+        xs = jnp.asarray(RNG.randn(8, 16), jnp.float32)
+        assert ops.dot_distances(qs, xs).shape == (2, 8)
+        lut = jnp.asarray(RNG.rand(2, 4, 8), jnp.float32)
+        codes = jnp.asarray(RNG.randint(0, 8, (9, 4)), jnp.uint8)
+        assert ops.pq_adc_distances(lut, codes).shape == (2, 9)
+        qc = jnp.asarray(RNG.randint(0, 2 ** 31, (2, 2)), jnp.uint32)
+        xc = jnp.asarray(RNG.randint(0, 2 ** 31, (5, 2)), jnp.uint32)
+        assert ops.hamming_distances(qc, xc).shape == (2, 5)

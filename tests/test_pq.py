@@ -1,0 +1,89 @@
+"""Product quantization: codebooks, encode/decode, ADC identity, recall."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PQConfig, ProductQuantizer, exact_knn
+from repro.core.pq import adc_distances, build_adc_lut, decode, encode, \
+    train_codebooks
+from repro.data.synthetic import gaussian_mixture
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    return gaussian_mixture(1500, 32, n_clusters=16, scale=0.15, seed=0)
+
+
+class TestCodebooks:
+    def test_shapes_and_dtype(self, clustered):
+        pq = ProductQuantizer(PQConfig(m=8, k=32, iters=8))
+        pq.train(jnp.asarray(clustered))
+        assert pq.codebooks.shape == (8, 32, 4)
+        codes = pq.encode(jnp.asarray(clustered))
+        assert codes.shape == (1500, 8) and codes.dtype == jnp.uint8
+
+    def test_kmeans_reduces_distortion(self, clustered):
+        x = jnp.asarray(clustered)
+        few = train_codebooks(jax.random.PRNGKey(0), x, 4, 16, iters=1)
+        many = train_codebooks(jax.random.PRNGKey(0), x, 4, 16, iters=20)
+
+        def distortion(cb):
+            return float(jnp.mean(jnp.sum(
+                (x - decode(encode(x, cb), cb)) ** 2, axis=1)))
+
+        assert distortion(many) <= distortion(few) + 1e-6
+
+    def test_dim_divisibility_validated(self):
+        with pytest.raises(ValueError):
+            PQConfig(m=7).validate(32)
+
+
+class TestADC:
+    def test_adc_equals_l2_to_reconstruction(self, clustered):
+        """The exact identity ADC(q, code) == ‖q − decode(code)‖²."""
+        pq = ProductQuantizer(PQConfig(m=8, k=16, iters=5))
+        pq.train(jnp.asarray(clustered))
+        codes = pq.encode(jnp.asarray(clustered[:64]))
+        recon = np.asarray(pq.decode(codes))
+        q = clustered[100:103]
+        lut = build_adc_lut(jnp.asarray(q), pq.codebooks)
+        adc = np.asarray(adc_distances(lut, codes))
+        want = ((q[:, None, :] - recon[None, :, :]) ** 2).sum(-1)
+        np.testing.assert_allclose(adc, want, rtol=1e-3, atol=1e-3)
+
+    def test_recall_on_clustered_data(self, clustered):
+        pq = ProductQuantizer(PQConfig(m=16, k=64, iters=15))
+        pq.train(jnp.asarray(clustered))
+        codes = pq.encode(jnp.asarray(clustered))
+        q = gaussian_mixture(32, 32, n_clusters=16, scale=0.15, seed=7)
+        _, ids = pq.search(codes, jnp.asarray(q), 10)
+        gt = exact_knn(q, clustered, 10, metric="l2")
+        recall = np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                          for a, b in zip(np.asarray(ids), gt)])
+        assert recall > 0.55, recall
+
+    def test_compression_ratio(self):
+        pq = ProductQuantizer(PQConfig(m=16, k=256))
+        assert pq.compression_ratio(128) == 32.0   # 512B -> 16B
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1000))
+    def test_encode_deterministic(self, seed):
+        x = np.random.RandomState(seed).randn(50, 16).astype(np.float32)
+        pq = ProductQuantizer(PQConfig(m=4, k=8, iters=3))
+        pq.train(jnp.asarray(x), seed=0)
+        c1 = np.asarray(pq.encode(jnp.asarray(x)))
+        c2 = np.asarray(pq.encode(jnp.asarray(x)))
+        assert (c1 == c2).all()
+
+    def test_state_dict_roundtrip(self, clustered):
+        pq = ProductQuantizer(PQConfig(m=8, k=16, iters=4))
+        pq.train(jnp.asarray(clustered))
+        pq2 = ProductQuantizer(PQConfig(m=8, k=16, iters=4))
+        pq2.load_state_dict(pq.state_dict())
+        codes1 = np.asarray(pq.encode(jnp.asarray(clustered[:32])))
+        codes2 = np.asarray(pq2.encode(jnp.asarray(clustered[:32])))
+        assert (codes1 == codes2).all()

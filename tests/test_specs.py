@@ -1,0 +1,96 @@
+"""Dry-run cell specs: the 40-cell matrix, skip rules, spec shapes.
+
+Validates the assignment's cell accounting without compiling anything
+(repro.launch.dryrun itself is never imported here — it sets the 512-device
+XLA flag for its own process only).
+"""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import arch_ids, get_config
+from repro.launch import specs as SP
+
+LONG_RUNNERS = {"recurrentgemma-9b", "mixtral-8x7b", "xlstm-1.3b"}
+
+
+def test_cell_matrix_is_40():
+    assert len(arch_ids()) == 10
+    assert len(SP.SHAPES) == 4
+    assert len(arch_ids()) * len(SP.SHAPES) == 40
+
+
+def test_long_500k_skip_rules_match_assignment():
+    runs, skips = set(), set()
+    for arch in arch_ids():
+        ok, why = SP.cell_supported(get_config(arch), "long_500k")
+        (runs if ok else skips).add(arch)
+        if not ok:
+            assert "full-attention" in why     # skips carry their reason
+    assert runs == LONG_RUNNERS
+    assert len(skips) == 7
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_every_other_shape_supported(arch):
+    cfg = get_config(arch)
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        ok, _ = SP.cell_supported(cfg, shape)
+        assert ok, (arch, shape)
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_train_specs_shapes(arch):
+    cfg = get_config(arch)
+    cell = SP.SHAPES["train_4k"]
+    specs = SP.lm_train_specs(cfg, cell)
+    assert specs["tokens"].shape == (256, 4096)
+    assert specs["tokens"].dtype == jnp.int32
+    if cfg.is_enc_dec:   # audio frontend stub: precomputed frame embeddings
+        assert specs["frames"].shape == (256, 4096, cfg.d_model)
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_decode_specs_state_is_bounded_for_windowed_archs(arch):
+    import jax
+    cfg = get_config(arch)
+    cell = SP.SHAPES["decode_32k"]
+    tokens, state = SP.lm_decode_specs(cfg, cell)
+    assert tokens.shape == (128, 1)
+    # every leaf is abstract (no allocation) and KV caches respect windows
+    leaves = jax.tree_util.tree_leaves(state)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    if arch == "mixtral-8x7b":
+        kv = [l for l in leaves if l.ndim == 5]
+        assert kv and all(l.shape[2] <= cfg.window for l in kv)  # ring cache
+
+
+def test_long_500k_states_stay_small():
+    """The sub-quadratic archs must not allocate 500k-token buffers."""
+    import jax
+    for arch in LONG_RUNNERS:
+        cfg = get_config(arch)
+        tokens, state = SP.lm_decode_specs(cfg, SP.SHAPES["long_500k"])
+        nbytes = sum(
+            int(jnp.prod(jnp.array(l.shape))) * l.dtype.itemsize
+            for l in jax.tree_util.tree_leaves(state))
+        # xlstm matrix states are the biggest legitimate state (B=1)
+        assert nbytes < 2 << 30, (arch, nbytes)
+
+
+def test_db_specs_row_padding():
+    from repro.configs.quantixar_db import CONFIG
+    sp = SP.db_specs(CONFIG, "flat", row_multiple=512)
+    assert sp["corpus"].shape[0] % 512 == 0
+    assert sp["corpus"].shape[0] >= CONFIG.n_vectors
+
+
+def test_model_flops_ordering():
+    """train > prefill > decode for the same arch; MoE active < total."""
+    from benchmarks import roofline as RL
+    cfg = get_config("mixtral-8x7b")
+    n_active = cfg.active_param_count()
+    train = RL.train_model_flops(n_active, 256 * 4096)
+    prefill = 2.0 * n_active * 32 * 32768
+    decode = RL.decode_model_flops(n_active, 128)
+    assert train > prefill > decode > 0

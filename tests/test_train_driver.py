@@ -1,0 +1,41 @@
+"""End-to-end training driver: loss goes down, checkpoint/restart works."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.train import train
+
+
+@pytest.mark.slow
+def test_train_smoke_loss_decreases(tmp_path):
+    cfg = get_smoke_config("qwen2-1.5b")
+    out = train(cfg, steps=8, global_batch=4, seq_len=32, lr=5e-3,
+                log_every=1)
+    losses = [m["loss"] for m in out["metrics"]]
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.slow
+def test_checkpoint_restart_resumes_step(tmp_path):
+    """Kill at step 6, restart, verify resume from the step-4 checkpoint and
+    completion — the fault-tolerance contract."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    ckpt = str(tmp_path / "ck")
+    with pytest.raises(RuntimeError, match="simulated"):
+        train(cfg, steps=10, global_batch=4, seq_len=32, ckpt_dir=ckpt,
+              checkpoint_every=2, simulate_failure_at=6)
+    out = train(cfg, steps=10, global_batch=4, seq_len=32, ckpt_dir=ckpt,
+                checkpoint_every=2)
+    # resumed: fewer than 10 steps of fresh metrics; run completed
+    steps_logged = [m["step"] for m in out["metrics"]]
+    assert steps_logged[0] > 1          # did not restart from scratch
+    assert steps_logged[-1] == 10
+
+
+@pytest.mark.slow
+def test_enc_dec_driver():
+    cfg = get_smoke_config("seamless-m4t-medium")
+    out = train(cfg, steps=3, global_batch=2, seq_len=16)
+    assert np.isfinite([m["loss"] for m in out["metrics"]]).all()
