@@ -1,0 +1,13 @@
+# Tier-1 verification + smoke runs.
+
+PY ?= python
+
+.PHONY: test smoke ci
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+smoke:
+	PYTHONPATH=src $(PY) examples/quickstart.py
+
+ci: test smoke

@@ -285,3 +285,13 @@ def analyze(hlo_text: str, entry: Optional[str] = None) -> HloCost:
     return HloCost(flops=t.flops, bytes_naive=t.bytes_naive,
                    bytes_fused=t.bytes_fused, coll_bytes=t.coll,
                    coll_count=t.coll_count, loops=loops)
+
+
+def xla_cost_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across jaxlib versions: older
+    releases return a per-device list of dicts, newer ones a single dict
+    (and either may return None when the backend has no analysis)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return dict(cost) if cost else {}

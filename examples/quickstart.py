@@ -1,9 +1,10 @@
-"""Quantixar quickstart: the paper's engine end to end on one host.
+"""Quantixar quickstart: the collection-oriented public API end to end.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Covers: entity insert (vectors + metadata), HNSW build, vector query, MEVS
-filtered query, PQ/BQ quantized engines with rescore, persistence round-trip.
+Covers: declarative schema (vector field + typed metadata), string-id
+upsert, fluent filtered queries, quantized collections with rescore,
+delete/tombstone + compact, and Database save/load persistence.
 """
 
 import os
@@ -15,68 +16,93 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core import (And, BQConfig, EngineConfig, PQConfig, Predicate,
-                        QuantixarEngine, exact_knn)  # noqa: E402
+from repro.api import (BoolField, CollectionSchema, Database,  # noqa: E402
+                       KeywordField, NumericField, VectorField)
+from repro.core import BQConfig, PQConfig, exact_knn  # noqa: E402
 from repro.data.synthetic import gaussian_mixture  # noqa: E402
 
 N, DIM, K = 8000, 64, 10
 
 
-def recall(ids, gt):
-    return np.mean([len(set(a.tolist()) & set(b.tolist())) / gt.shape[1]
-                    for a, b in zip(ids, gt)])
+def recall(hit_ids, gt):
+    return np.mean([len(set(ids) & {f"item-{j}" for j in row}) / gt.shape[1]
+                    for ids, row in zip(hit_ids, gt)])
 
 
 def main():
     print("== Quantixar quickstart ==")
     corpus = gaussian_mixture(N, DIM, n_clusters=24, scale=0.2, seed=0)
     queries = gaussian_mixture(32, DIM, n_clusters=24, scale=0.2, seed=1)
-    meta = [{"category": int(i % 8), "price": float(i % 100)}
-            for i in range(N)]
     gt = exact_knn(queries, corpus, K, metric="cosine")
+    ids = [f"item-{i}" for i in range(N)]
+    payloads = [{"category": f"cat-{i % 8}", "price": float(i % 100),
+                 "in_stock": i % 5 != 0} for i in range(N)]
 
-    # 1. HNSW engine (the paper's default path) -----------------------------
+    db = Database()
+
+    # 1. HNSW collection (the paper's default path) -------------------------
     # ef_search=128: the bulk builder trades a little graph quality for a
     # ~100x faster build (examples/ann_benchmark.py --full uses the paper's
     # incremental algorithm, recall ~0.99 at ef=64)
-    eng = QuantixarEngine(EngineConfig(dim=DIM, index="hnsw", ef_search=128,
-                                       quantization="none", builder="bulk"))
+    items = db.create_collection(CollectionSchema(
+        name="items",
+        vector=VectorField(dim=DIM, metric="cosine", index="hnsw",
+                           ef_search=128),
+        fields=(KeywordField("category"), NumericField("price"),
+                BoolField("in_stock"))))
     t0 = time.perf_counter()
-    eng.add(corpus, meta)
-    eng.build()
-    print(f"hnsw build: {time.perf_counter() - t0:.2f}s  stats={eng.stats()}")
+    items.upsert(ids, corpus, payloads)
+    hits = items.query(queries[0]).top_k(K).run()   # triggers the build
+    print(f"hnsw build: {time.perf_counter() - t0:.2f}s  "
+          f"stats={items.stats()}")
 
     t0 = time.perf_counter()
-    d, ids = eng.search(queries, K)
-    print(f"vector query: recall@{K}={recall(ids, gt):.3f} "
-          f"({len(queries) / (time.perf_counter() - t0):.0f} QPS)")
+    batches = items.query(queries).top_k(K).run()
+    qps = len(queries) / (time.perf_counter() - t0)
+    r = recall([[h.id for h in hs] for hs in batches], gt)
+    print(f"vector query: recall@{K}={r:.3f} ({qps:.0f} QPS)")
 
-    # 2. MEVS: metadata-filtered search --------------------------------------
-    flt = And([Predicate("category", "eq", 3), Predicate("price", "lt", 50)])
-    d, ids = eng.search(queries, 5, flt=flt)
-    cats = {meta[i]["category"] for i in ids.ravel() if i >= 0}
-    print(f"MEVS filter category==3 & price<50: returned cats={cats}")
+    # 2. MEVS: schema-validated filtered search -----------------------------
+    hits = (items.query(queries[0])
+            .filter(category="cat-3", in_stock=True)
+            .where("price", "lt", 50)
+            .top_k(5)
+            .run())
+    cats = {h.payload["category"] for h in hits}
+    print(f"filtered query category==cat-3 & price<50 & in_stock: "
+          f"{[h.id for h in hits]} cats={cats}")
 
-    # 3. Quantized engines ----------------------------------------------------
+    # 3. Quantized collections ----------------------------------------------
     for quant, qcfg in (("pq", {"pq": PQConfig(m=16, k=64, iters=10)}),
                         ("bq", {"bq": BQConfig(bits=256)})):
-        e = QuantixarEngine(EngineConfig(dim=DIM, index="flat",
-                                         quantization=quant, **qcfg))
-        e.add(corpus)
-        e.build()
-        _, ids = e.search(queries, K)
-        print(f"{quant}+rescore: recall@{K}={recall(ids, gt):.3f} "
-              f"compression={e.stats()['compression']:.0f}x")
+        col = db.create_collection(
+            name=f"items-{quant}",
+            vector=VectorField(dim=DIM, index="flat", quantization=quant,
+                               **qcfg))
+        col.upsert(ids, corpus)
+        batches = col.query(queries).top_k(K).run()
+        r = recall([[h.id for h in hs] for hs in batches], gt)
+        print(f"{quant}+rescore: recall@{K}={r:.3f} "
+              f"compression={col.stats()['compression']:.0f}x")
 
-    # 4. Persistence ----------------------------------------------------------
-    from repro.checkpoint import CheckpointStore
+    # 4. Upsert / delete / compact ------------------------------------------
+    items.upsert("item-0", queries[0], [{"category": "cat-0", "price": 1.0}])
+    items.delete(["item-1", "item-2"])
+    print(f"after upsert+delete: live={len(items)} "
+          f"tombstones={items.tombstones}")
+    reclaimed = items.compact()
+    print(f"compact() reclaimed {reclaimed} rows; live={len(items)}")
+
+    # 5. Persistence --------------------------------------------------------
     with tempfile.TemporaryDirectory() as tmp:
-        store = CheckpointStore(tmp)
-        store.save(eng.state_dict(), step=1)
-        eng2 = QuantixarEngine.from_state_dict(eng.config, store.load())
-        _, ids2 = eng2.search(queries, K)
-        print(f"persistence round-trip identical: "
-              f"{bool((ids2 == eng.search(queries, K)[1]).all())}")
+        db.save(tmp, step=1)
+        db2 = Database.load(tmp)
+        same = ([h.id for h in db2["items"].query(queries[1]).top_k(K).run()]
+                == [h.id for h in items.query(queries[1]).top_k(K).run()])
+        print(f"Database save/load round-trip identical: {same}")
+        print(f"collections on disk: {db2.list_collections()}")
+        db2.close()
+    db.close()
 
 
 if __name__ == "__main__":

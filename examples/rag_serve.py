@@ -1,12 +1,14 @@
 """Retrieval-augmented serving: an LM backbone embeds documents, Quantixar
-indexes them, and batched queries retrieve + decode.
+collections index them, and batched queries retrieve + decode.
 
     PYTHONPATH=src python examples/rag_serve.py
 
 This is the combined-system story (DESIGN.md §5): the vector database is the
 retrieval layer for any assigned architecture; here the reduced qwen2 family
-config is the embedder AND the generator, with the request batcher and
-straggler-tolerant shard fan-out from repro.serving in the loop.
+config is the embedder AND the generator.  Documents live in per-shard
+`Collection`s of one `Database` under stable string ids ("doc-<i>"), with
+the request batcher and straggler-tolerant shard fan-out from repro.serving
+in the loop — the fan-out merges string-id results directly.
 """
 
 import os
@@ -19,8 +21,8 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.api import Database, VectorField  # noqa: E402
 from repro.configs import get_smoke_config  # noqa: E402
-from repro.core import EngineConfig, QuantixarEngine  # noqa: E402
 from repro.data.synthetic import zipf_tokens  # noqa: E402
 from repro.models import init_train_state, make_serve_step  # noqa: E402
 from repro.models.model import forward, init_decode_state  # noqa: E402
@@ -47,24 +49,20 @@ def main():
     emb = np.asarray(embed(jnp.asarray(docs)), dtype=np.float32)
     dim = emb.shape[1]
 
-    # 2. shard the corpus across N_SHARDS engines (per-shard HNSW graphs)
-    shard_engines = []
+    # 2. shard the corpus across N_SHARDS collections (one Database); ids are
+    #    globally stable strings, so no row-offset bookkeeping is needed
+    db = Database()
     per = N_DOCS // N_SHARDS
+    shard_fns = []
     for s in range(N_SHARDS):
-        eng = QuantixarEngine(EngineConfig(dim=dim, index="flat"))
-        eng.add(emb[s * per:(s + 1) * per])
-        eng.build()
-        base = s * per
+        col = db.create_collection(name=f"docs-{s}",
+                                   vector=VectorField(dim=dim, index="flat"))
+        lo = s * per
+        col.upsert([f"doc-{i}" for i in range(lo, lo + per)],
+                   emb[lo: lo + per])
+        shard_fns.append(col.search_ids)
 
-        def make_fn(e, b):
-            def fn(q, k):
-                d, ids = e.search(q, k)
-                return d, np.where(ids >= 0, ids + b, -1)
-            return fn
-
-        shard_engines.append(make_fn(eng, base))
-
-    fanout = QuorumFanout(shard_engines, deadline_ms=2000,
+    fanout = QuorumFanout(shard_fns, deadline_ms=2000,
                           min_quorum=N_SHARDS - 1)
     batcher = RequestBatcher(lambda q, k: fanout.search(q, k), max_batch=16)
 
@@ -81,7 +79,7 @@ def main():
           f"({fanout.last_responders}/{N_SHARDS} shards answered)")
 
     # prefill query + best doc, then greedy-decode 8 tokens
-    best = np.array([ids[0] for _, ids in retrieved])
+    best = np.array([int(ids[0].split("-")[1]) for _, ids in retrieved])
     ctx = np.concatenate([docs[best], queries], axis=1)  # (8, 2*DOC_LEN)
     dstate = init_decode_state(cfg, 8, ctx.shape[1] + 16)
     tok = jnp.asarray(ctx[:, :1])
@@ -96,6 +94,7 @@ def main():
     for i, row in enumerate(np.stack(gen, axis=1)):
         print(f"  q{i}: doc={int(best[i])} -> {row.tolist()}")
     batcher.close()
+    db.close()
 
 
 if __name__ == "__main__":

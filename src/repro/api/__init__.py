@@ -1,0 +1,32 @@
+"""Quantixar public API: schema-driven vector data management.
+
+    from repro.api import (Database, CollectionSchema, VectorField,
+                           KeywordField, NumericField)
+
+    db = Database()
+    col = db.create_collection(CollectionSchema(
+        name="docs",
+        vector=VectorField(dim=128, metric="cosine", index="hnsw"),
+        fields=(KeywordField("lang"), NumericField("stars"))))
+    col.upsert(["doc-1"], vec[None, :], [{"lang": "en", "stars": 4}])
+    hits = col.query(q).filter(lang="en").where("stars", "ge", 3).run()
+
+The engine (`repro.core.engine.QuantixarEngine`) stays the internal
+per-collection backend; this layer adds named collections, declarative typed
+schemas, stable string ids with upsert/delete/compact semantics, and a
+fluent filtered query builder routed through the serving batcher.
+"""
+
+from ..core.metadata import And, Filter, Not, Or, Predicate
+from .collection import Collection, Entity
+from .database import Database
+from .query import Hit, Query
+from .schema import (BoolField, CollectionSchema, KeywordField,
+                     MetadataField, NumericField, SchemaError, VectorField)
+
+__all__ = [
+    "And", "Filter", "Not", "Or", "Predicate",
+    "Collection", "Entity", "Database", "Hit", "Query",
+    "BoolField", "CollectionSchema", "KeywordField", "MetadataField",
+    "NumericField", "SchemaError", "VectorField",
+]

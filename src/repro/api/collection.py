@@ -1,0 +1,297 @@
+"""`Collection`: schema-driven entity store over a `QuantixarEngine`.
+
+The engine speaks positional row ids over an append-only corpus; the
+collection owns the mapping to stable string ids with `upsert`/`get`/
+`delete` semantics:
+
+  * upsert of an existing id tombstones the old row and appends a new one
+    (HNSW is build-once, so in-place mutation is not possible);
+  * deletes are tombstones — dead rows stay in the index but are masked out
+    of every search via the engine's row-mask hook;
+  * `compact()` rebuilds the engine from live rows only, reclaiming the
+    space and graph quality lost to tombstones.
+
+Queries route through a per-collection `RequestBatcher` (serving layer), so
+concurrent single-vector queries coalesce into padded engine batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.engine import QuantixarEngine
+from ..core.metadata import Filter
+from ..serving.batcher import RequestBatcher
+from .query import Hit, Query, validate_filter
+from .schema import CollectionSchema, SchemaError
+
+
+@dataclasses.dataclass
+class Entity:
+    """One stored entity: string id, vector, validated payload."""
+
+    id: str
+    vector: np.ndarray
+    payload: Dict[str, Any]
+
+
+def _as_id_list(ids: Union[str, Sequence[str]]) -> List[str]:
+    ids = [ids] if isinstance(ids, str) else list(ids)
+    for i in ids:
+        if not isinstance(i, str) or not i:
+            raise SchemaError(f"ids must be non-empty strings, got {i!r}")
+    return ids
+
+
+class Collection:
+    def __init__(self, schema: CollectionSchema):
+        self.schema = schema
+        self._engine = QuantixarEngine(schema.vector.to_engine_config())
+        self._ids: List[str] = []        # row -> string id (dead rows too)
+        self._live: List[bool] = []      # row -> liveness (False = tombstone)
+        self._row_of: Dict[str, int] = {}   # live id -> row
+        self._batcher: Optional[RequestBatcher] = None
+        self._mask: Optional[np.ndarray] = None   # cached liveness mask
+        self._epoch = 0        # bumped by compact(): row numbers change
+        # one engine is shared between caller threads (2-D queries, writes)
+        # and the batcher worker (1-D queries); its lazy rebuild and chunk
+        # concatenation are not thread-safe, so serialize around it
+        self._lock = threading.RLock()
+
+    # ------------------------------------------------------------ properties
+    @property
+    def name(self) -> str:
+        return self.schema.name
+
+    def __len__(self) -> int:
+        """Number of live entities."""
+        return len(self._row_of)
+
+    @property
+    def tombstones(self) -> int:
+        """Dead rows still occupying the index (reclaim via `compact()`)."""
+        return len(self._ids) - len(self._row_of)
+
+    def __contains__(self, id: str) -> bool:
+        return id in self._row_of
+
+    def ids(self) -> List[str]:
+        """Live ids in insertion order."""
+        return [i for i, alive in zip(self._ids, self._live) if alive]
+
+    # ---------------------------------------------------------------- writes
+    def upsert(self, ids: Union[str, Sequence[str]],
+               vectors: np.ndarray,
+               payloads: Optional[Sequence[Optional[Dict[str, Any]]]] = None,
+               ) -> int:
+        """Insert or replace entities by string id.  Returns rows written.
+
+        Payloads are validated against the schema (typed fields, required
+        fields, unknown-key rejection) before anything is stored.
+        """
+        ids = _as_id_list(ids)
+        if len(set(ids)) != len(ids):
+            raise SchemaError("duplicate ids within one upsert batch")
+        vectors = np.asarray(vectors, dtype=np.float32)
+        if vectors.ndim == 1:
+            vectors = vectors[None, :]
+        if vectors.ndim != 2 or vectors.shape[1] != self.schema.vector.dim:
+            raise SchemaError(
+                f"expected ({len(ids)}, {self.schema.vector.dim}) vectors, "
+                f"got {vectors.shape}")
+        if len(vectors) != len(ids):
+            raise SchemaError(f"{len(ids)} ids but {len(vectors)} vectors")
+        if payloads is None:
+            payloads = [None] * len(ids)
+        if len(payloads) != len(ids):
+            raise SchemaError(f"{len(ids)} ids but {len(payloads)} payloads")
+        # validate everything before mutating anything
+        validated = [self.schema.validate_payload(p) for p in payloads]
+
+        with self._lock:
+            row0 = len(self._ids)
+            self._engine.add(vectors, validated)
+            for off, id_ in enumerate(ids):
+                old = self._row_of.pop(id_, None)
+                if old is not None:
+                    self._live[old] = False      # replaced -> tombstone
+                self._ids.append(id_)
+                self._live.append(True)
+                self._row_of[id_] = row0 + off
+            self._mask = None
+            return len(ids)
+
+    def delete(self, ids: Union[str, Sequence[str]]) -> int:
+        """Tombstone entities by id; unknown ids are ignored.  Returns the
+        number actually deleted."""
+        n = 0
+        with self._lock:
+            for id_ in _as_id_list(ids):
+                row = self._row_of.pop(id_, None)
+                if row is not None:
+                    self._live[row] = False
+                    n += 1
+            self._mask = None
+        return n
+
+    def compact(self) -> int:
+        """Rebuild the engine over live rows only (drops tombstones, restores
+        graph quality).  Returns the number of rows reclaimed."""
+        with self._lock:
+            dead = self.tombstones
+            if dead == 0:
+                return 0
+            live_rows = [r for r, alive in enumerate(self._live) if alive]
+            vectors = self._engine.vectors[live_rows]
+            payloads = [self._engine.metadata.record(r) for r in live_rows]
+            live_ids = [self._ids[r] for r in live_rows]
+
+            self._engine = QuantixarEngine(
+                self.schema.vector.to_engine_config())
+            self._ids, self._live, self._row_of = [], [], {}
+            self._mask = None
+            self._epoch += 1   # all row numbers just changed
+            if live_ids:
+                self.upsert(live_ids, vectors, payloads)
+            return dead
+
+    # ----------------------------------------------------------------- reads
+    def get(self, id: str) -> Optional[Entity]:
+        with self._lock:
+            row = self._row_of.get(id)
+            if row is None:
+                return None
+            return Entity(id=id, vector=self._engine.vectors[row].copy(),
+                          payload=self._engine.metadata.record(row))
+
+    def query(self, vector: np.ndarray) -> Query:
+        """Start a fluent query: `col.query(v).filter(...).top_k(5).run()`."""
+        return Query(self, vector)
+
+    def search(self, vectors: np.ndarray, k: int,
+               flt: Optional[Filter] = None, ef: Optional[int] = None,
+               rescore: Optional[bool] = None,
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Engine-level batch search with tombstones masked out.  Returns
+        (distances, rows) — use `query()` for string-id `Hit` results."""
+        if flt is not None:
+            flt = validate_filter(self.schema, flt)
+        return self._engine_search(np.asarray(vectors, np.float32), k,
+                                   flt=flt, ef=ef, rescore=rescore)
+
+    def search_ids(self, vectors: np.ndarray, k: int, **kw
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Like `search` but returns string ids (object array; None = empty
+        slot) — the shape shard fan-out / cross-collection merges consume."""
+        with self._lock:
+            d, rows = self.search(vectors, k, **kw)
+            ids = np.empty(rows.shape, dtype=object)
+            for idx, row in np.ndenumerate(rows):
+                # inf distance = padded/masked slot the engine only
+                # demoted; its row number must not leak out as a real id
+                ids[idx] = (self._ids[int(row)]
+                            if row >= 0 and np.isfinite(d[idx]) else None)
+            return d, ids
+
+    # ------------------------------------------------------------- internals
+    def _live_mask(self) -> Optional[np.ndarray]:
+        if self.tombstones == 0:
+            return None
+        if self._mask is None:        # invalidated by every write
+            self._mask = np.asarray(self._live, dtype=bool)
+        return self._mask
+
+    def _engine_search(self, queries, k, flt=None, ef=None, rescore=None):
+        with self._lock:
+            if len(self._row_of) == 0:
+                raise SchemaError(
+                    f"collection {self.name!r} is empty; upsert() first")
+            k = min(k, len(self._row_of))
+            return self._engine.search(queries, k, flt=flt, ef=ef,
+                                       mask=self._live_mask(),
+                                       rescore=rescore)
+
+    @property
+    def batcher(self) -> RequestBatcher:
+        """Lazily-started serving batcher (single-vector query path)."""
+        if self._batcher is None:
+            self._batcher = RequestBatcher(self._engine_search,
+                                           max_batch=32, max_wait_ms=2.0)
+        return self._batcher
+
+    def _hits_for(self, d: np.ndarray, rows: np.ndarray,
+                  include_vector: bool) -> List[Hit]:
+        hits = []
+        with self._lock:
+            for dist, row in zip(d, rows):
+                row = int(row)
+                if row < 0 or not np.isfinite(dist):
+                    continue                    # padded / masked-out slot
+                hits.append(Hit(
+                    id=self._ids[row], score=float(dist),
+                    payload=self._engine.metadata.record(row),
+                    vector=(self._engine.vectors[row].copy()
+                            if include_vector else None)))
+        return hits
+
+    def _run_query(self, vec, k, flt, ef, rescore, include_vector, timeout):
+        if vec.ndim == 2:                       # already a batch: direct path
+            with self._lock:   # rows stay valid until translated to ids
+                d, rows = self._engine_search(vec, k, flt=flt, ef=ef,
+                                              rescore=rescore)
+                return [self._hits_for(d[i], rows[i], include_vector)
+                        for i in range(len(vec))]
+        # single query: coalesce through the serving batcher.  The future
+        # resolves outside the lock, so a concurrent compact() could renumber
+        # rows before translation — detect via the epoch and retry.
+        for _ in range(5):
+            epoch = self._epoch
+            fut = self.batcher.submit(vec, k, flt=flt, ef=ef, rescore=rescore)
+            d, rows = fut.result(timeout=timeout)
+            with self._lock:
+                if self._epoch == epoch:
+                    return self._hits_for(d, rows, include_vector)
+        raise RuntimeError(
+            f"collection {self.name!r} kept compacting during the query")
+
+    def close(self) -> None:
+        if self._batcher is not None:
+            self._batcher.close()
+            self._batcher = None
+
+    def stats(self) -> Dict[str, Any]:
+        out = self._engine.stats()
+        out.update({"name": self.name, "live": len(self),
+                    "tombstones": self.tombstones})
+        return out
+
+    # ----------------------------------------------------------- persistence
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        with self._lock:
+            state = dict(self._engine.state_dict())
+            state["__ids__"] = np.asarray(self._ids, dtype=object)
+            state["__live__"] = np.asarray(self._live, dtype=bool)
+            return state
+
+    @classmethod
+    def from_state_dict(cls, schema: CollectionSchema,
+                        state: Dict[str, np.ndarray]) -> "Collection":
+        col = cls.__new__(cls)
+        col.schema = schema
+        engine_state = {k: v for k, v in state.items()
+                        if not k.startswith("__")}
+        col._engine = QuantixarEngine.from_state_dict(
+            schema.vector.to_engine_config(), engine_state)
+        col._ids = [str(i) for i in state["__ids__"]]
+        col._live = [bool(b) for b in state["__live__"]]
+        col._row_of = {i: r for r, (i, alive)
+                       in enumerate(zip(col._ids, col._live)) if alive}
+        col._batcher = None
+        col._mask = None
+        col._epoch = 0
+        col._lock = threading.RLock()
+        return col

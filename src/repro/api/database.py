@@ -1,0 +1,116 @@
+"""`Database`: named collections + save/load through the checkpoint store.
+
+One `Database` manages many named `Collection`s and persists them as a
+single atomic checkpoint generation: every collection's engine state and
+id/tombstone maps become namespaced arrays, and the declarative schemas ride
+in the manifest's `extra` JSON — so `Database.load(path)` reconstructs the
+full typed API surface (schemas included) from disk alone.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+from ..checkpoint.store import CheckpointStore
+from .collection import Collection
+from .schema import CollectionSchema, MetadataField, SchemaError, VectorField
+
+_SEP = "/"          # namespaces collection arrays inside one checkpoint
+
+
+class Database:
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._collections: Dict[str, Collection] = {}
+        self._store = CheckpointStore(path) if path else None
+
+    # ------------------------------------------------------------ management
+    def create_collection(
+            self,
+            schema: Optional[CollectionSchema] = None, *,
+            name: Optional[str] = None,
+            vector: Optional[VectorField] = None,
+            fields: Sequence[MetadataField] = ()) -> Collection:
+        """Create from a full `CollectionSchema`, or from name/vector/fields
+        keyword parts."""
+        if schema is None:
+            if name is None or vector is None:
+                raise SchemaError(
+                    "pass a CollectionSchema or name= and vector=")
+            schema = CollectionSchema(name=name, vector=vector,
+                                      fields=tuple(fields))
+        if schema.name in self._collections:
+            raise SchemaError(f"collection {schema.name!r} already exists")
+        col = Collection(schema)
+        self._collections[schema.name] = col
+        return col
+
+    def collection(self, name: str) -> Collection:
+        if name not in self._collections:
+            raise KeyError(f"no collection {name!r}; "
+                           f"have {self.list_collections()}")
+        return self._collections[name]
+
+    __getitem__ = collection
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._collections
+
+    def list_collections(self) -> List[str]:
+        return sorted(self._collections)
+
+    def drop_collection(self, name: str) -> None:
+        col = self._collections.pop(name, None)
+        if col is None:
+            raise KeyError(f"no collection {name!r}")
+        col.close()
+
+    def close(self) -> None:
+        for col in self._collections.values():
+            col.close()
+
+    # ----------------------------------------------------------- persistence
+    def _resolve_store(self, path: Optional[str]) -> CheckpointStore:
+        if path is not None:
+            return CheckpointStore(path)
+        if self._store is None:
+            raise SchemaError(
+                "no path: pass save(path=...) or Database(path=...)")
+        return self._store
+
+    def save(self, path: Optional[str] = None, *, step: int = 0) -> int:
+        """Commit every collection atomically as one checkpoint generation.
+        Returns the generation id."""
+        store = self._resolve_store(path)
+        state: Dict[str, Any] = {}
+        schemas: Dict[str, Dict[str, Any]] = {}
+        for name, col in self._collections.items():
+            for key, arr in col.state_dict().items():
+                state[f"{name}{_SEP}{key}"] = arr
+            schemas[name] = col.schema.to_dict()
+        return store.save(state, step=step,
+                          extra={"quantixar_collections": schemas})
+
+    @classmethod
+    def load(cls, path: str, *, generation: Optional[int] = None
+             ) -> "Database":
+        """Reconstruct a full database (schemas, engines, id maps) from the
+        newest — or a specific — committed generation."""
+        db = cls(path)
+        store = db._store
+        man = store.manifest(generation)
+        schemas = man.extra.get("quantixar_collections")
+        if schemas is None:
+            raise SchemaError(
+                f"checkpoint under {path!r} was not written by Database.save")
+        state = store.load(generation)
+        for name, schema_dict in schemas.items():
+            schema = CollectionSchema.from_dict(schema_dict)
+            prefix = f"{name}{_SEP}"
+            sub = {k[len(prefix):]: v for k, v in state.items()
+                   if k.startswith(prefix)}
+            db._collections[name] = Collection.from_state_dict(schema, sub)
+        return db
+
+    def stats(self) -> Dict[str, Any]:
+        return {name: col.stats() for name, col in self._collections.items()}

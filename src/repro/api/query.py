@@ -1,0 +1,132 @@
+"""Fluent query builder + `Hit` result type for the Collection API.
+
+    hits = (col.query(vec)
+               .filter(category="news")
+               .where("price", "lt", 50)
+               .top_k(5)
+               .ef(128)
+               .include("vector")
+               .run())
+
+Filters are validated against the collection schema before execution (unknown
+fields and kind-incompatible operators fail fast, instead of silently
+matching nothing).  Single-vector queries are routed through the collection's
+`RequestBatcher`; matrix queries go straight to the engine as one batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Union
+
+import numpy as np
+
+from ..core.metadata import And, Filter, Not, Or, Predicate
+from .schema import FIELD_OPS, CollectionSchema, SchemaError
+
+
+@dataclasses.dataclass
+class Hit:
+    """One search result: stable string id, distance score (lower = closer,
+    in the collection metric), and the requested payload/vector."""
+
+    id: str
+    score: float
+    payload: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    vector: Optional[np.ndarray] = None
+
+    def __repr__(self):
+        vec = "" if self.vector is None else f", vector[{len(self.vector)}]"
+        return f"Hit(id={self.id!r}, score={self.score:.4f}{vec})"
+
+
+def validate_filter(schema: CollectionSchema, flt: Filter) -> Filter:
+    """Check every predicate in the tree against the schema's typed fields."""
+    if isinstance(flt, Predicate):
+        fld = schema.field(flt.column)          # raises on unknown column
+        allowed = FIELD_OPS[fld.kind]
+        if flt.op not in allowed:
+            raise SchemaError(
+                f"op {flt.op!r} not valid for {fld.kind} field "
+                f"{flt.column!r}; allowed: {allowed}")
+        if flt.op == "in":
+            value = [fld.validate(v) for v in flt.value]
+            return Predicate(flt.column, "in", tuple(value))
+        return Predicate(flt.column, flt.op, fld.validate(flt.value))
+    if isinstance(flt, (And, Or)):
+        clauses = tuple(validate_filter(schema, c) for c in flt.clauses)
+        return type(flt)(clauses)
+    if isinstance(flt, Not):
+        return Not(validate_filter(schema, flt.clause))
+    raise SchemaError(f"not a filter: {flt!r}")
+
+
+class Query:
+    """Immutable-ish builder: every setter returns self for chaining."""
+
+    def __init__(self, collection, vector: np.ndarray):
+        self._col = collection
+        self._vec = np.asarray(vector, dtype=np.float32)
+        if self._vec.ndim not in (1, 2):
+            raise SchemaError(
+                f"query vector must be 1-D or 2-D, got {self._vec.shape}")
+        if self._vec.shape[-1] != collection.schema.vector.dim:
+            raise SchemaError(
+                f"query dim {self._vec.shape[-1]} != collection dim "
+                f"{collection.schema.vector.dim}")
+        self._k = 10
+        self._flt: Optional[Filter] = None
+        self._ef: Optional[int] = None
+        self._rescore: Optional[bool] = None
+        self._include_vector = False
+
+    # --------------------------------------------------------------- setters
+    def filter(self, *clauses: Filter, **equals: Any) -> "Query":
+        """AND the given filter trees (and `field=value` equality sugar)
+        into the query's filter."""
+        new: List[Filter] = list(clauses)
+        new += [Predicate(col, "eq", val) for col, val in equals.items()]
+        for clause in new:
+            clause = validate_filter(self._col.schema, clause)
+            self._flt = clause if self._flt is None else And(
+                (self._flt, clause))
+        return self
+
+    def where(self, column: str, op: str, value: Any) -> "Query":
+        """Sugar for `.filter(Predicate(column, op, value))`."""
+        return self.filter(Predicate(column, op, value))
+
+    def top_k(self, k: int) -> "Query":
+        if k <= 0:
+            raise SchemaError(f"top_k must be positive, got {k}")
+        self._k = int(k)
+        return self
+
+    def ef(self, ef: int) -> "Query":
+        """HNSW beam width for this query (recall/latency knob)."""
+        self._ef = int(ef)
+        return self
+
+    def rescore(self, on: bool = True) -> "Query":
+        """Override the schema's exact-rescore setting for this query."""
+        self._rescore = bool(on)
+        return self
+
+    def include(self, *what: str) -> "Query":
+        """Opt into returning heavier attributes; currently `"vector"`."""
+        for name in what:
+            if name == "vector":
+                self._include_vector = True
+            elif name != "payload":           # payload always included
+                raise SchemaError(f"cannot include {name!r}; "
+                                  f"options: 'payload', 'vector'")
+        return self
+
+    # ------------------------------------------------------------- execution
+    def run(self, timeout: float = 120.0
+            ) -> Union[List[Hit], List[List[Hit]]]:
+        """Execute.  1-D input -> List[Hit]; 2-D input -> List[List[Hit]]."""
+        return self._col._run_query(
+            self._vec, self._k, flt=self._flt, ef=self._ef,
+            rescore=self._rescore, include_vector=self._include_vector,
+            timeout=timeout)

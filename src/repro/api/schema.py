@@ -1,0 +1,233 @@
+"""Declarative collection schemas for the public API layer.
+
+A `CollectionSchema` is the single source of truth for a collection: one
+vector field (dim / metric / index / quantization and their tuning knobs)
+plus typed metadata fields (keyword / numeric / bool) that are validated at
+upsert time.  The schema compiles down to the engine's `EngineConfig` and
+round-trips through plain dicts so `Database.save()` can persist it inside
+the checkpoint manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from ..core.bq import BQConfig
+from ..core.distances import available_metrics
+from ..core.engine import EngineConfig
+from ..core.hnsw_build import HNSWConfig
+from ..core.ivf import IVFConfig
+from ..core.pq import PQConfig
+
+INDEXES = ("hnsw", "flat", "ivf")
+QUANTIZATIONS = ("none", "pq", "bq")
+
+# column names the Collection layer reserves for itself
+RESERVED_NAMES = ("id", "score", "vector")
+
+
+class SchemaError(ValueError):
+    """Invalid schema definition or payload that violates the schema."""
+
+
+# --------------------------------------------------------------------- fields
+@dataclasses.dataclass(frozen=True)
+class MetadataField:
+    """Base typed metadata field; subclasses define `kind` + type checking."""
+
+    name: str
+    required: bool = False
+    kind = "abstract"
+
+    def __post_init__(self):
+        if not self.name or not isinstance(self.name, str):
+            raise SchemaError(f"field name must be a non-empty str, "
+                              f"got {self.name!r}")
+        if self.name in RESERVED_NAMES:
+            raise SchemaError(f"field name {self.name!r} is reserved")
+
+    def validate(self, value: Any) -> Any:
+        raise NotImplementedError
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "name": self.name,
+                "required": self.required}
+
+
+@dataclasses.dataclass(frozen=True)
+class KeywordField(MetadataField):
+    """Exact-match string attribute (eq/ne/in filters)."""
+
+    kind = "keyword"
+
+    def validate(self, value: Any) -> str:
+        if not isinstance(value, str):
+            raise SchemaError(
+                f"field {self.name!r} expects str, got {type(value).__name__}")
+        return value
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericField(MetadataField):
+    """int/float attribute (full comparison-operator set)."""
+
+    kind = "numeric"
+
+    def validate(self, value: Any) -> float:
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            raise SchemaError(
+                f"field {self.name!r} expects a number, "
+                f"got {type(value).__name__}")
+        return float(value)
+
+
+@dataclasses.dataclass(frozen=True)
+class BoolField(MetadataField):
+    """Boolean attribute (eq/ne filters)."""
+
+    kind = "bool"
+
+    def validate(self, value: Any) -> bool:
+        if not isinstance(value, bool):
+            raise SchemaError(
+                f"field {self.name!r} expects bool, "
+                f"got {type(value).__name__}")
+        return value
+
+
+_FIELD_KINDS = {"keyword": KeywordField, "numeric": NumericField,
+                "bool": BoolField}
+
+# ops a filter may apply per field kind
+FIELD_OPS = {
+    "keyword": ("eq", "ne", "in"),
+    "numeric": ("eq", "ne", "lt", "le", "gt", "ge", "in"),
+    "bool": ("eq", "ne"),
+}
+
+
+def field_from_dict(d: Dict[str, Any]) -> MetadataField:
+    kind = d.get("kind")
+    if kind not in _FIELD_KINDS:
+        raise SchemaError(f"unknown field kind {kind!r}")
+    return _FIELD_KINDS[kind](name=d["name"],
+                              required=bool(d.get("required", False)))
+
+
+# --------------------------------------------------------------- vector field
+@dataclasses.dataclass(frozen=True)
+class VectorField:
+    """The collection's single vector attribute + index/quantization choice."""
+
+    dim: int
+    metric: str = "cosine"
+    index: str = "hnsw"
+    quantization: str = "none"
+    hnsw: HNSWConfig = dataclasses.field(default_factory=HNSWConfig)
+    pq: PQConfig = dataclasses.field(default_factory=PQConfig)
+    bq: BQConfig = dataclasses.field(default_factory=BQConfig)
+    ivf: IVFConfig = dataclasses.field(default_factory=IVFConfig)
+    ef_search: int = 64
+    rescore: bool = True
+    rescore_multiplier: int = 4
+    builder: str = "bulk"          # API default: fast bulk HNSW construction
+
+    def __post_init__(self):
+        if not isinstance(self.dim, int) or self.dim <= 0:
+            raise SchemaError(f"dim must be a positive int, got {self.dim!r}")
+        if self.metric not in available_metrics():
+            raise SchemaError(f"metric {self.metric!r}; "
+                              f"have {sorted(available_metrics())}")
+        if self.index not in INDEXES:
+            raise SchemaError(f"index {self.index!r}; have {INDEXES}")
+        if self.quantization not in QUANTIZATIONS:
+            raise SchemaError(f"quantization {self.quantization!r}; "
+                              f"have {QUANTIZATIONS}")
+        if self.quantization == "pq" and self.dim % self.pq.m != 0:
+            raise SchemaError(
+                f"dim={self.dim} not divisible by pq.m={self.pq.m}")
+
+    def to_engine_config(self) -> EngineConfig:
+        return EngineConfig(
+            dim=self.dim, metric=self.metric, index=self.index,
+            quantization=self.quantization, pq=self.pq, bq=self.bq,
+            hnsw=self.hnsw, ivf=self.ivf, builder=self.builder,
+            ef_search=self.ef_search, rescore=self.rescore,
+            rescore_multiplier=self.rescore_multiplier)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "VectorField":
+        d = dict(d)
+        for key, sub in (("hnsw", HNSWConfig), ("pq", PQConfig),
+                         ("bq", BQConfig), ("ivf", IVFConfig)):
+            if isinstance(d.get(key), dict):
+                d[key] = sub(**d[key])
+        return cls(**d)
+
+
+# --------------------------------------------------------------------- schema
+@dataclasses.dataclass(frozen=True)
+class CollectionSchema:
+    """Named collection layout: one vector field + typed metadata fields."""
+
+    name: str
+    vector: VectorField
+    fields: Tuple[MetadataField, ...] = ()
+
+    def __post_init__(self):
+        if not self.name or not isinstance(self.name, str):
+            raise SchemaError("collection name must be a non-empty str")
+        if "/" in self.name:
+            raise SchemaError("collection name must not contain '/' "
+                              "(used as a checkpoint key separator)")
+        object.__setattr__(self, "fields", tuple(self.fields))
+        names = [f.name for f in self.fields]
+        if len(set(names)) != len(names):
+            raise SchemaError(f"duplicate field names in {names}")
+
+    def field(self, name: str) -> MetadataField:
+        for f in self.fields:
+            if f.name == name:
+                return f
+        raise SchemaError(f"collection {self.name!r} has no field {name!r}; "
+                          f"have {[f.name for f in self.fields]}")
+
+    def field_names(self) -> Tuple[str, ...]:
+        return tuple(f.name for f in self.fields)
+
+    def validate_payload(self,
+                         payload: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+        """Type-check a payload against the schema; returns the normalized
+        payload (numerics coerced to float).  Unknown keys are rejected."""
+        payload = payload or {}
+        if not isinstance(payload, dict):
+            raise SchemaError(f"payload must be a dict, "
+                              f"got {type(payload).__name__}")
+        known = {f.name: f for f in self.fields}
+        unknown = sorted(set(payload) - set(known))
+        if unknown:
+            raise SchemaError(f"unknown payload keys {unknown}; "
+                              f"schema fields are {sorted(known)}")
+        out: Dict[str, Any] = {}
+        for name, fld in known.items():
+            if name in payload:
+                out[name] = fld.validate(payload[name])
+            elif fld.required:
+                raise SchemaError(f"missing required field {name!r}")
+        return out
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, "vector": self.vector.to_dict(),
+                "fields": [f.to_dict() for f in self.fields]}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "CollectionSchema":
+        return cls(name=d["name"],
+                   vector=VectorField.from_dict(d["vector"]),
+                   fields=tuple(field_from_dict(f)
+                                for f in d.get("fields", ())))

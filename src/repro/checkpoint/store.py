@@ -24,6 +24,7 @@ Fault-tolerance contract:
 from __future__ import annotations
 
 import dataclasses
+import errno
 import json
 import os
 import shutil
@@ -119,7 +120,6 @@ class CheckpointStore:
         """Commit a new generation atomically. Returns the generation id."""
         with self._lock:
             gen = (self.latest() or 0) + 1
-            final = self._gen_dir(gen)
             stage = tempfile.mkdtemp(prefix=f".stage-{gen}-", dir=self.root)
             try:
                 arrays = {}
@@ -129,16 +129,27 @@ class CheckpointStore:
                     _save_array(os.path.join(stage, fname), arr)
                     arrays[key] = {"file": fname, "shape": list(arr.shape),
                                    "dtype": str(arr.dtype), "shard": shard_id}
-                man = Manifest(generation=gen, step=step,
-                               created_unix=time.time(),
-                               num_shards=num_shards, arrays=arrays,
-                               wal_segments=[], extra=extra or {})
-                # manifest written last => staging dir becomes valid only now
-                with open(os.path.join(stage, MANIFEST), "w") as f:
-                    f.write(man.to_json())
-                    f.flush()
-                    os.fsync(f.fileno())
-                os.rename(stage, final)        # atomic publish
+                while True:
+                    man = Manifest(generation=gen, step=step,
+                                   created_unix=time.time(),
+                                   num_shards=num_shards, arrays=arrays,
+                                   wal_segments=[], extra=extra or {})
+                    # manifest written last => staging dir valid only now
+                    with open(os.path.join(stage, MANIFEST), "w") as f:
+                        f.write(man.to_json())
+                        f.flush()
+                        os.fsync(f.fileno())
+                    try:
+                        os.rename(stage, self._gen_dir(gen))   # atomic publish
+                        break
+                    except OSError as e:
+                        if e.errno not in (errno.ENOTEMPTY, errno.EEXIST):
+                            raise          # real IO failure, not a gen race
+                        # another store instance over the same root claimed
+                        # this generation between latest() and rename — a
+                        # committed gen dir is never empty, so the rename
+                        # refuses; take the next slot and re-stamp
+                        gen += 1
                 _fsync_dir(self.root)
             except BaseException:
                 shutil.rmtree(stage, ignore_errors=True)
@@ -182,6 +193,9 @@ class CheckpointStore:
 
     def manifest(self, gen: Optional[int] = None) -> Manifest:
         gen = gen if gen is not None else self.latest()
+        if gen is None:
+            raise FileNotFoundError(
+                f"no committed generation under {self.root}")
         with open(os.path.join(self._gen_dir(gen), MANIFEST)) as f:
             return Manifest.from_json(f.read())
 

@@ -177,8 +177,14 @@ class QuantixarEngine:
     # ---------------------------------------------------------------- search
     def search(self, queries: np.ndarray, k: int,
                flt: Optional[Filter] = None,
-               ef: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+               ef: Optional[int] = None,
+               mask: Optional[np.ndarray] = None,
+               rescore: Optional[bool] = None) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k similarity search (Vector Query / MEVS).
+
+        `mask` is an optional precomputed (N,) bool row mask (e.g. the API
+        layer's tombstone liveness mask) AND-ed with the metadata filter.
+        `rescore` overrides the config's exact-rescore setting per query.
 
         Returns (distances (Q,k) in the engine metric, ids (Q,k); -1 = none).
         """
@@ -189,10 +195,16 @@ class QuantixarEngine:
         if queries.ndim == 1:
             queries = queries[None, :]
         ef = ef or max(cfg.ef_search, k)
-        mask = self.metadata.evaluate(flt) if flt is not None else None
+        flt_mask = self.metadata.evaluate(flt) if flt is not None else None
+        if mask is not None:
+            mask = np.asarray(mask, dtype=bool)
+            mask = flt_mask & mask if flt_mask is not None else mask
+        else:
+            mask = flt_mask
+        do_rescore = cfg.rescore if rescore is None else rescore
+        do_rescore = do_rescore and cfg.quantization != "none"
 
-        fetch = k * cfg.rescore_multiplier if (
-            cfg.rescore and cfg.quantization != "none") else k
+        fetch = k * cfg.rescore_multiplier if do_rescore else k
 
         if cfg.index == "flat" or self._route_to_flat(mask):
             d, ids = self._flat_pass(queries, fetch, mask)
@@ -201,11 +213,12 @@ class QuantixarEngine:
         else:
             d, ids = self._hnsw_pass(queries, fetch, ef, mask)
 
-        if cfg.rescore and cfg.quantization != "none":
-            d, ids = self._rescore(queries, ids, k)
+        if do_rescore:
+            d, ids = self._rescore(queries, ids, k, mask=mask)
         else:
             d, ids = d[:, :k], ids[:, :k]
-        return d, ids
+        # contract: +inf slots (masked-out / padded) never expose a row id
+        return d, np.where(np.isfinite(d), ids, -1)
 
     def _route_to_flat(self, mask: Optional[np.ndarray]) -> bool:
         """MEVS routing (paper: filter first, then search the subset): at low
@@ -291,9 +304,11 @@ class QuantixarEngine:
                 return self._flat_pass(queries, k, mask)
         return d[:, :k], ids[:, :k]
 
-    def _rescore(self, queries, cand_ids, k):
+    def _rescore(self, queries, cand_ids, k, mask=None):
         """Exact re-ranking of quantized first-pass candidates (paper's
-        optional precision knob)."""
+        optional precision knob).  The row mask must be re-applied here:
+        exact distances would otherwise resurrect masked-out candidates that
+        the first pass only demoted to +inf."""
         pair = get_metric(self.config.metric)
         raw = self.vectors
         safe = np.maximum(cand_ids, 0)
@@ -302,16 +317,23 @@ class QuantixarEngine:
             np.asarray(pair(jnp.asarray(queries[i: i + 1]),
                             jnp.asarray(cand_vecs[i])))[0]
             for i in range(len(queries))])
-        d = np.where(cand_ids >= 0, d, np.inf)
+        ok = cand_ids >= 0
+        if mask is not None:
+            ok &= mask[safe]
+        d = np.where(ok, d, np.inf)
         order = np.argsort(d, axis=1, kind="stable")[:, :k]
-        return (np.take_along_axis(d, order, axis=1),
-                np.take_along_axis(cand_ids, order, axis=1))
+        d = np.take_along_axis(d, order, axis=1)
+        ids = np.take_along_axis(cand_ids, order, axis=1)
+        return d, np.where(np.isfinite(d), ids, -1)
 
     # ----------------------------------------------------------- persistence
     def state_dict(self) -> Dict[str, Any]:
         state: Dict[str, Any] = {
             "vectors": self.vectors,
             "n": np.array([self._n], dtype=np.int64),
+            # rows added after the last build() are only in `vectors`; the
+            # loader must rebuild rather than trust the serialized index
+            "dirty": np.array([self._dirty]),
         }
         if self._codes is not None:
             state["codes"] = self._codes
@@ -366,6 +388,8 @@ class QuantixarEngine:
             eng._dirty = False
         elif config.index == "flat" and eng._n:
             eng._dirty = False
+        if "dirty" in state and bool(state["dirty"][0]):
+            eng._dirty = True
         return eng
 
     def stats(self) -> Dict[str, Any]:

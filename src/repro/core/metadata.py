@@ -85,6 +85,13 @@ class MetadataStore:
             raise KeyError(f"no metadata column {name!r}")
         return np.asarray(self._columns[name])
 
+    def record(self, row: int) -> Dict[str, Any]:
+        """The row's metadata record (missing values omitted)."""
+        if not 0 <= row < self._n:
+            raise IndexError(f"row {row} out of range [0, {self._n})")
+        return {name: col[row] for name, col in self._columns.items()
+                if col[row] is not None}
+
     def evaluate(self, flt: Filter) -> np.ndarray:
         """Predicate tree -> (N,) bool mask. Missing values never match."""
         if isinstance(flt, Predicate):

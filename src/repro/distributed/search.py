@@ -27,6 +27,23 @@ from ..launch.mesh import batch_axes, mesh_axis_sizes
 
 Array = jax.Array
 
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _sm(f, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+
+if hasattr(jax.lax, "axis_size"):
+    _axis_size = jax.lax.axis_size
+else:                                              # jax 0.4.x: folds to const
+    def _axis_size(ax):
+        return jax.lax.psum(1, ax)
+
 
 def _model_in_mesh(mesh: Mesh, feature_dim: int = 0) -> bool:
     """Use the model axis for the feature dim only when it divides evenly
@@ -48,7 +65,7 @@ def _merge_shard_topk(d: Array, k: int, rows) -> Tuple[Array, Array]:
     neg, idx = jax.lax.top_k(-d, kk)
     shard = jax.lax.axis_index(rows[0])
     for ax in rows[1:]:
-        shard = shard * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        shard = shard * _axis_size(ax) + jax.lax.axis_index(ax)
     gids = (idx + shard * n_local).astype(jnp.int32)
     cand_d = jax.lax.all_gather(-neg, rows, axis=1, tiled=True)
     cand_i = jax.lax.all_gather(gids, rows, axis=1, tiled=True)
@@ -64,13 +81,12 @@ def _build(mesh: Mesh, local_distances: Callable, k: int,
         d = local_distances(corpus, queries)
         return _merge_shard_topk(d, k, rows)
 
-    # check_vma=False: after the cross-shard all_gather + top_k the outputs
-    # are value-identical on every shard (exactness property-tested), but the
-    # static varying-axes checker cannot infer replication through gather.
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(corpus_spec, query_spec),
-                       out_specs=(P(None, None), P(None, None)),
-                       check_vma=False)
+    # replication checking off: after the cross-shard all_gather + top_k the
+    # outputs are value-identical on every shard (exactness property-tested),
+    # but the static varying-axes checker cannot infer that through gather.
+    fn = _shard_map(local, mesh,
+                    (corpus_spec, query_spec),
+                    (P(None, None), P(None, None)))
     return jax.jit(fn,
                    in_shardings=(NamedSharding(mesh, corpus_spec),
                                  NamedSharding(mesh, query_spec)),

@@ -215,7 +215,7 @@ def run_cell(name: str, builder, model_flops: float, mesh, multi_pod: bool,
                            "wt") as f:
                 f.write(compiled.as_text())
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = HC.xla_cost_dict(compiled)
         # trip-count-aware HLO analysis (XLA-CPU cost_analysis counts loop
         # bodies once — see benchmarks/hlo_cost.py)
         hc = HC.analyze(compiled.as_text())

@@ -1,5 +1,5 @@
-"""Serving driver: Quantixar vector search behind a request batcher, plus an
-optional LM decode loop (retrieval-augmented generation glue).
+"""Serving driver: a Quantixar Collection behind the request batcher, plus an
+optional metadata-filtered query path (the API-layer serving posture).
 
 CPU demo:
   PYTHONPATH=src python -m repro.launch.serve --n 20000 --dim 128 \
@@ -13,21 +13,26 @@ import time
 
 import numpy as np
 
-from ..core import EngineConfig, QuantixarEngine
+from ..api import Database, KeywordField, VectorField
 from ..core.hnsw_build import exact_knn
 from ..data.synthetic import gaussian_mixture
-from ..serving.batcher import RequestBatcher
 
 
-def build_engine(n: int, dim: int, index: str, quant: str,
-                 builder: str = "bulk", seed: int = 0) -> QuantixarEngine:
-    eng = QuantixarEngine(EngineConfig(dim=dim, index=index,
-                                       quantization=quant, builder=builder))
+def build_database(n: int, dim: int, index: str, quant: str,
+                   seed: int = 0):
+    """Returns (db, corpus) so callers score recall against exactly the
+    vectors that were indexed."""
+    db = Database()
+    col = db.create_collection(
+        name="corpus",
+        vector=VectorField(dim=dim, index=index, quantization=quant,
+                           builder="bulk"),
+        fields=(KeywordField("shard"),))
     corpus = gaussian_mixture(n, dim, seed=seed)
-    meta = [{"shard": int(i % 8)} for i in range(n)]
-    eng.add(corpus, meta)
-    eng.build(seed=seed)
-    return eng
+    ids = [f"vec-{i}" for i in range(n)]
+    payloads = [{"shard": f"s{i % 8}"} for i in range(n)]
+    col.upsert(ids, corpus, payloads)
+    return db, corpus
 
 
 def main():
@@ -43,27 +48,33 @@ def main():
 
     print(f"[serve] building {args.index}+{args.quant} over {args.n} vectors")
     t0 = time.perf_counter()
-    eng = build_engine(args.n, args.dim, args.index, args.quant)
+    db, corpus = build_database(args.n, args.dim, args.index, args.quant)
+    col = db["corpus"]
+    col.query(gaussian_mixture(1, args.dim, seed=7)[0]).top_k(1).run()
     print(f"[serve] built in {time.perf_counter() - t0:.1f}s; "
-          f"stats={eng.stats()}")
+          f"stats={col.stats()}")
 
-    batcher = RequestBatcher(lambda q, k: eng.search(q, k),
-                             max_batch=args.max_batch)
-    rng = np.random.RandomState(1)
+    # the Collection's query path IS the batcher path: concurrent submits
+    # coalesce into padded engine batches
     queries = gaussian_mixture(args.requests, args.dim, seed=99)
     t0 = time.perf_counter()
-    futures = [batcher.submit(q, args.k) for q in queries]
+    futures = [col.batcher.submit(q, args.k) for q in queries]
     results = [f.result(timeout=60) for f in futures]
     dt = time.perf_counter() - t0
-    batcher.close()
 
-    gt = exact_knn(queries, eng.vectors, args.k, metric="cosine")
-    hits = sum(len(set(ids.tolist()) & set(t.tolist()))
-               for (_, ids), t in zip(results, gt))
+    gt = exact_knn(queries, corpus, args.k, metric="cosine")
+    hits = sum(len(set(rows.tolist()) & set(t.tolist()))
+               for (_, rows), t in zip(results, gt))
     recall = hits / (len(queries) * args.k)
     print(f"[serve] {args.requests} requests in {dt:.2f}s "
           f"({args.requests / dt:.0f} QPS host-side), "
-          f"{batcher.batches_served} batches, recall@{args.k}={recall:.3f}")
+          f"{col.batcher.batches_served} batches, "
+          f"recall@{args.k}={recall:.3f}")
+
+    hits = (col.query(queries[0]).filter(shard="s3").top_k(5).run())
+    print(f"[serve] filtered query shard==s3 -> "
+          f"{[(h.id, h.payload['shard']) for h in hits]}")
+    db.close()
 
 
 if __name__ == "__main__":

@@ -106,29 +106,37 @@ def train(cfg: ModelConfig, *, steps: int, global_batch: int, seq_len: int,
         data = lm_batches(cfg.vocab_size, global_batch, seq_len, seed=seed)
         metrics_hist = []
         t0 = time.perf_counter()
-        for step in range(start_step, steps):
-            nb = next(data)
-            batch = {"tokens": jnp.asarray(nb.tokens),
-                     "targets": jnp.asarray(nb.targets),
-                     "segment_ids": jnp.asarray(nb.segment_ids)}
-            if cfg.is_enc_dec:
-                batch["frames"] = jnp.zeros(
-                    (global_batch, seq_len, cfg.d_model),
-                    cfg.activation_dtype)
-            state, metrics = step_jit(state, batch)
-            if simulate_failure_at == step + 1:
-                print(f"[train] >>> simulated failure at step {step + 1} <<<")
-                raise RuntimeError("simulated node failure")
-            if (step + 1) % log_every == 0:
-                loss = float(metrics["loss"])
-                metrics_hist.append({"step": step + 1, "loss": loss})
-                print(f"[train] step {step + 1}: loss={loss:.4f} "
-                      f"gnorm={float(metrics['grad_norm']):.3f}")
-            if store and checkpoint_every and (step + 1) % checkpoint_every == 0:
-                store.save_async(_flatten_state(
-                    state[0] if grad_compress else state), step=step + 1)
+        try:
+            for step in range(start_step, steps):
+                nb = next(data)
+                batch = {"tokens": jnp.asarray(nb.tokens),
+                         "targets": jnp.asarray(nb.targets),
+                         "segment_ids": jnp.asarray(nb.segment_ids)}
+                if cfg.is_enc_dec:
+                    batch["frames"] = jnp.zeros(
+                        (global_batch, seq_len, cfg.d_model),
+                        cfg.activation_dtype)
+                state, metrics = step_jit(state, batch)
+                if simulate_failure_at == step + 1:
+                    print(f"[train] >>> simulated failure at step "
+                          f"{step + 1} <<<")
+                    raise RuntimeError("simulated node failure")
+                if (step + 1) % log_every == 0:
+                    loss = float(metrics["loss"])
+                    metrics_hist.append({"step": step + 1, "loss": loss})
+                    print(f"[train] step {step + 1}: loss={loss:.4f} "
+                          f"gnorm={float(metrics['grad_norm']):.3f}")
+                if store and checkpoint_every and \
+                        (step + 1) % checkpoint_every == 0:
+                    store.save_async(_flatten_state(
+                        state[0] if grad_compress else state), step=step + 1)
+        finally:
+            if store:
+                # flush in-flight async commits even on a crashed run — the
+                # IO thread outlives the training step, so a restart must
+                # deterministically see every checkpoint that was snapshotted
+                store.wait_async()
         if store:
-            store.wait_async()
             store.save(_flatten_state(
                 state[0] if grad_compress else state), step=steps)
         dt = time.perf_counter() - t0

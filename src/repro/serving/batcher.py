@@ -25,20 +25,37 @@ class Request:
     k: int
     future: "Future"
     enqueued_at: float
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # requests are only co-batched when their extras (filter/ef/...) agree;
+    # repr-compare since extras values (Filter trees) aren't hashable
+    extras_key: str = ""
+
+    def __post_init__(self):
+        # drop None-valued extras so `submit(q, k)` and
+        # `submit(q, k, flt=None)` land in the same batch
+        self.extras = {k: v for k, v in self.extras.items() if v is not None}
+        self.extras_key = repr(sorted(self.extras.items()))
 
 
 class Future:
     def __init__(self):
         self._ev = threading.Event()
         self._value = None
+        self._exc: Optional[BaseException] = None
 
     def set(self, value):
         self._value = value
         self._ev.set()
 
+    def set_exception(self, exc: BaseException):
+        self._exc = exc
+        self._ev.set()
+
     def result(self, timeout: Optional[float] = None):
         if not self._ev.wait(timeout):
             raise TimeoutError("request timed out")
+        if self._exc is not None:
+            raise self._exc
         return self._value
 
 
@@ -51,16 +68,19 @@ class RequestBatcher:
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self._q: "queue.Queue[Optional[Request]]" = queue.Queue()
+        self._carry: Optional[Request] = None   # head of the next batch
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._running = True
         self.batches_served = 0
         self.requests_served = 0
         self._thread.start()
 
-    def submit(self, query: np.ndarray, k: int) -> Future:
+    def submit(self, query: np.ndarray, k: int, **extras: Any) -> Future:
+        """Enqueue one query.  `extras` (e.g. flt=..., ef=...) are forwarded
+        to search_fn; requests are only co-batched when their extras match."""
         fut = Future()
         self._q.put(Request(np.asarray(query, np.float32), k, fut,
-                            time.perf_counter()))
+                            time.perf_counter(), dict(extras)))
         return fut
 
     def close(self):
@@ -70,9 +90,12 @@ class RequestBatcher:
 
     def _loop(self):
         while self._running:
-            first = self._q.get()
-            if first is None:
-                return
+            if self._carry is not None:
+                first, self._carry = self._carry, None
+            else:
+                first = self._q.get()
+                if first is None:
+                    return
             batch = [first]
             deadline = time.perf_counter() + self.max_wait
             while len(batch) < self.max_batch:
@@ -86,11 +109,19 @@ class RequestBatcher:
                 if nxt is None:
                     self._running = False
                     break
+                if nxt.extras_key != first.extras_key:
+                    self._carry = nxt       # incompatible: heads next batch
+                    break
                 batch.append(nxt)
-            k = max(r.k for r in batch)
-            queries = np.stack([r.query for r in batch])
-            d, ids = self._search(queries, k)
-            d, ids = np.asarray(d), np.asarray(ids)
+            try:
+                k = max(r.k for r in batch)
+                queries = np.stack([r.query for r in batch])
+                d, ids = self._search(queries, k, **first.extras)
+                d, ids = np.asarray(d), np.asarray(ids)
+            except Exception as exc:          # surface, don't kill the loop
+                for r in batch:
+                    r.future.set_exception(exc)
+                continue
             for i, r in enumerate(batch):
                 r.future.set((d[i, : r.k], ids[i, : r.k]))
             self.batches_served += 1

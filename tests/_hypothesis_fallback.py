@@ -1,0 +1,64 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The property tests in this suite only use `@settings`, `@given`, and
+`st.integers(lo, hi)`.  When the real package is available the test modules
+import it directly; otherwise they fall back to this shim, which runs each
+property with a bounded number of seeded pseudo-random draws so the
+properties stay exercised (just with less adversarial example search).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+# Cap fallback example counts: hypothesis shrinks + caches, we don't, so a
+# straight 30-example sweep of interpret-mode kernels would dominate CI time.
+MAX_FALLBACK_EXAMPLES = 10
+
+
+class _Integers:
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value = int(min_value)
+        self.max_value = int(max_value)
+
+    def draw(self, rng: np.random.RandomState) -> int:
+        return int(rng.randint(self.min_value, self.max_value + 1))
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+
+st = strategies
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Integers):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings may sit above or below @given; check both.
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", 20))
+            n = min(n, MAX_FALLBACK_EXAMPLES)
+            rng = np.random.RandomState(0)
+            # always include the boundary example first, then seeded draws
+            examples = [[s.min_value for s in strats]]
+            examples += [[s.draw(rng) for s in strats] for _ in range(n - 1)]
+            for vals in examples:
+                fn(*args, *vals, **kwargs)
+        # pytest must not follow __wrapped__: the drawn params would look
+        # like missing fixtures
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

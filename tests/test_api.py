@@ -1,0 +1,282 @@
+"""Public API layer: schemas, collections, string ids, queries, persistence."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (And, BoolField, CollectionSchema, Database, Hit,
+                       KeywordField, NumericField, Predicate, SchemaError,
+                       VectorField)
+from repro.core import EngineConfig, PQConfig, QuantixarEngine
+from repro.data.synthetic import gaussian_mixture
+
+N, DIM = 600, 32
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return gaussian_mixture(N, DIM, n_clusters=8, scale=0.2, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return gaussian_mixture(8, DIM, n_clusters=8, scale=0.2, seed=3)
+
+
+def _ids(n=N):
+    return [f"item-{i}" for i in range(n)]
+
+
+def _payloads(n=N):
+    return [{"category": f"cat-{i % 4}", "price": float(i % 50),
+             "in_stock": i % 3 == 0} for i in range(n)]
+
+
+def _schema(name="items", **vector_kw):
+    vector_kw.setdefault("dim", DIM)
+    vector_kw.setdefault("index", "flat")
+    return CollectionSchema(
+        name=name, vector=VectorField(**vector_kw),
+        fields=(KeywordField("category"), NumericField("price"),
+                BoolField("in_stock")))
+
+
+def _collection(corpus, **vector_kw):
+    col = Database().create_collection(_schema(**vector_kw))
+    col.upsert(_ids(), corpus, _payloads())
+    return col
+
+
+class TestSchemaValidation:
+    def test_bad_vector_field(self):
+        with pytest.raises(SchemaError):
+            VectorField(dim=0)
+        with pytest.raises(SchemaError):
+            VectorField(dim=8, metric="manhattan")
+        with pytest.raises(SchemaError):
+            VectorField(dim=8, index="lsh-forest")
+        with pytest.raises(SchemaError):
+            VectorField(dim=10, quantization="pq", pq=PQConfig(m=16))
+
+    def test_bad_schema(self):
+        v = VectorField(dim=8)
+        with pytest.raises(SchemaError):
+            CollectionSchema(name="", vector=v)
+        with pytest.raises(SchemaError):
+            CollectionSchema(name="a/b", vector=v)
+        with pytest.raises(SchemaError):
+            CollectionSchema(name="ok", vector=v,
+                             fields=(KeywordField("x"), NumericField("x")))
+        with pytest.raises(SchemaError):
+            KeywordField("id")          # reserved
+
+    def test_payload_type_errors(self):
+        s = _schema()
+        with pytest.raises(SchemaError):
+            s.validate_payload({"category": 7})
+        with pytest.raises(SchemaError):
+            s.validate_payload({"price": "cheap"})
+        with pytest.raises(SchemaError):
+            s.validate_payload({"in_stock": 1})      # bool field, int given
+        with pytest.raises(SchemaError):
+            s.validate_payload({"unknown_key": 1})
+        assert s.validate_payload({"price": 3})["price"] == 3.0
+
+    def test_required_field_enforced(self):
+        s = CollectionSchema(name="r", vector=VectorField(dim=8),
+                             fields=(KeywordField("lang", required=True),))
+        with pytest.raises(SchemaError):
+            s.validate_payload({})
+        assert s.validate_payload({"lang": "en"}) == {"lang": "en"}
+
+    def test_schema_dict_roundtrip(self):
+        s = _schema(index="hnsw", quantization="pq",
+                    pq=PQConfig(m=8, k=32, iters=5))
+        s2 = CollectionSchema.from_dict(s.to_dict())
+        assert s2 == s
+        assert s2.vector.pq.m == 8
+
+    def test_upsert_shape_and_id_errors(self, corpus):
+        col = Database().create_collection(_schema())
+        with pytest.raises(SchemaError):
+            col.upsert([""], corpus[:1])
+        with pytest.raises(SchemaError):
+            col.upsert(["a", "a"], corpus[:2])
+        with pytest.raises(SchemaError):
+            col.upsert(["a"], corpus[:1, :8])        # wrong dim
+        with pytest.raises(SchemaError):
+            col.upsert(["a", "b"], corpus[:1])       # count mismatch
+
+
+class TestCrud:
+    def test_upsert_get_delete_roundtrip(self, corpus):
+        col = _collection(corpus)
+        e = col.get("item-7")
+        assert e.id == "item-7" and e.payload["category"] == "cat-3"
+        np.testing.assert_allclose(e.vector, corpus[7])
+        assert col.get("missing") is None
+        assert len(col) == N and "item-7" in col
+
+        # replace: same id, new vector + payload
+        col.upsert("item-7", corpus[0],
+                   [{"category": "cat-0", "price": 1.0}])
+        e2 = col.get("item-7")
+        np.testing.assert_allclose(e2.vector, corpus[0])
+        assert e2.payload["category"] == "cat-0"
+        assert len(col) == N and col.tombstones == 1
+
+        assert col.delete("item-7") == 1
+        assert col.delete("item-7") == 0          # already gone
+        assert col.get("item-7") is None and len(col) == N - 1
+
+    def test_replaced_id_appears_once_in_results(self, corpus, queries):
+        col = _collection(corpus)
+        col.upsert("item-3", queries[0], [{"category": "cat-1"}])
+        hits = col.query(queries[0]).top_k(N).run()
+        ids = [h.id for h in hits]
+        assert ids.count("item-3") == 1
+        assert hits[0].id == "item-3"             # exact match ranks first
+
+    def test_query_validation(self, corpus, queries):
+        col = _collection(corpus)
+        with pytest.raises(SchemaError):
+            col.query(queries[0][:8])             # wrong dim
+        with pytest.raises(SchemaError):
+            col.query(queries[0]).top_k(0)
+        with pytest.raises(SchemaError):
+            col.query(queries[0]).filter(unknown=1)
+        with pytest.raises(SchemaError):          # lt on keyword field
+            col.query(queries[0]).where("category", "lt", "x")
+        with pytest.raises(SchemaError):
+            col.query(queries[0]).include("nope")
+        with pytest.raises(SchemaError):
+            Database().create_collection(_schema()).query(queries[0]).run()
+
+
+class TestQueryParity:
+    """The API layer must return exactly what the engine returns."""
+
+    def test_filtered_pq_hnsw_query_matches_engine(self, corpus, queries):
+        """Acceptance: filtered Query over a PQ-quantized HNSW collection ==
+        engine-level search, hit for hit (string ids resolved)."""
+        col = _collection(corpus, index="hnsw", quantization="pq",
+                          pq=PQConfig(m=8, k=32, iters=6))
+        flt = And((Predicate("category", "eq", "cat-1"),
+                   Predicate("price", "lt", 30)))
+
+        eng = QuantixarEngine(dataclasses.replace(
+            col.schema.vector.to_engine_config()))
+        eng.add(corpus, _payloads())
+        eng.build()
+        d_eng, rows_eng = eng.search(queries, 5, flt=flt)
+
+        hits = col.query(queries).filter(flt).top_k(5).run()
+        assert len(hits) == len(queries)
+        for qi in range(len(queries)):
+            got = [(h.id, pytest.approx(h.score, rel=1e-5))
+                   for h in hits[qi]]
+            want = [(f"item-{row}", pytest.approx(float(d), rel=1e-5))
+                    for d, row in zip(d_eng[qi], rows_eng[qi]) if row >= 0]
+            assert got == want
+            for h in hits[qi]:
+                assert h.payload["category"] == "cat-1"
+                assert h.payload["price"] < 30
+
+    def test_single_query_batcher_path_matches_direct(self, corpus, queries):
+        col = _collection(corpus)
+        direct = col.query(queries).top_k(5).run()      # 2-D: direct path
+        for qi in (0, 3):
+            single = col.query(queries[qi]).top_k(5).run()   # batcher path
+            assert [h.id for h in single] == [h.id for h in direct[qi]]
+        assert col.batcher.requests_served >= 2
+        col.close()
+
+    def test_include_vector_and_ef(self, corpus, queries):
+        col = _collection(corpus, index="hnsw")
+        hits = (col.query(queries[0]).top_k(3).ef(128)
+                .include("vector").run())
+        assert all(h.vector is not None and h.vector.shape == (DIM,)
+                   for h in hits)
+        row = int(hits[0].id.split("-")[1])
+        np.testing.assert_allclose(hits[0].vector, corpus[row])
+
+
+class TestTombstones:
+    def test_deleted_never_returned(self, corpus, queries):
+        col = _collection(corpus)
+        victims = [f"item-{i}" for i in range(0, 100)]
+        assert col.delete(victims) == 100
+        hits = col.query(queries[1]).top_k(N).run()
+        ids = {h.id for h in hits}
+        assert not ids & set(victims)
+        assert len(col) == N - 100
+
+    def test_compact_reclaims_and_preserves_results(self, corpus, queries):
+        col = _collection(corpus)
+        col.delete([f"item-{i}" for i in range(50)])
+        before = [h.id for h in col.query(queries[2]).top_k(10).run()]
+        reclaimed = col.compact()
+        assert reclaimed == 50 and col.tombstones == 0
+        assert len(col) == N - 50
+        after = [h.id for h in col.query(queries[2]).top_k(10).run()]
+        assert after == before
+        assert col.compact() == 0                 # idempotent
+
+    def test_quantized_tombstones_respected_with_rescore(self, corpus,
+                                                         queries):
+        """Rescore must not resurrect masked rows (regression: the exact
+        second pass used to drop the row mask)."""
+        col = _collection(corpus, index="flat", quantization="pq",
+                          pq=PQConfig(m=8, k=32, iters=6))
+        col.delete([f"item-{i}" for i in range(300)])
+        hits = col.query(queries[0]).top_k(N).run()
+        assert {h.id for h in hits} <= {f"item-{i}" for i in range(300, N)}
+
+
+class TestDatabase:
+    def test_collection_management(self):
+        db = Database()
+        db.create_collection(_schema("a"))
+        db.create_collection(_schema("b"))
+        assert db.list_collections() == ["a", "b"]
+        assert db["a"].name == "a" and "a" in db
+        with pytest.raises(SchemaError):
+            db.create_collection(_schema("a"))
+        db.drop_collection("a")
+        assert db.list_collections() == ["b"]
+        with pytest.raises(KeyError):
+            db.collection("a")
+
+    def test_save_load_roundtrip(self, corpus, queries, tmp_path):
+        db = Database()
+        col = db.create_collection(_schema("items", index="hnsw"))
+        col.upsert(_ids(), corpus, _payloads())
+        col.delete(["item-0", "item-1"])
+        other = db.create_collection(_schema("other"))
+        other.upsert(_ids(50), corpus[:50], _payloads(50))
+        before = [h.id for h in
+                  col.query(queries[0]).filter(category="cat-2")
+                  .top_k(5).run()]
+        gen = db.save(str(tmp_path), step=3)
+        assert gen == 1
+
+        db2 = Database.load(str(tmp_path))
+        assert db2.list_collections() == ["items", "other"]
+        col2 = db2["items"]
+        assert col2.schema == col.schema
+        assert len(col2) == N - 2 and col2.tombstones == 2
+        assert col2.get("item-0") is None
+        assert col2.get("item-5").payload == col.get("item-5").payload
+        after = [h.id for h in
+                 col2.query(queries[0]).filter(category="cat-2")
+                 .top_k(5).run()]
+        assert after == before
+        db2.close()
+        db.close()
+
+    def test_load_rejects_foreign_checkpoint(self, tmp_path):
+        from repro.checkpoint import CheckpointStore
+        CheckpointStore(str(tmp_path)).save({"x": np.zeros(3)})
+        with pytest.raises(SchemaError):
+            Database.load(str(tmp_path))

@@ -3,7 +3,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # deterministic shim keeps properties runnable
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import BinaryQuantizer, BQConfig, exact_knn
 from repro.core.bq import hamming_distances, pack_bits, unpack_bits

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # deterministic shim keeps properties runnable
+    from _hypothesis_fallback import given, settings, st
 
 from repro.data import (Prefetcher, fashion_mnist_like, gaussian_mixture,
                         host_slice, lm_batches, sift_like, zipf_tokens)
@@ -192,6 +195,7 @@ class TestHloCost:
 
     def test_xla_cost_analysis_undercounts_loops(self):
         """The reason hlo_cost exists — documents the XLA-CPU behaviour."""
+        from benchmarks import hlo_cost
         a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
         w = jax.ShapeDtypeStruct((12, 128, 128), jnp.float32)
 
@@ -201,7 +205,7 @@ class TestHloCost:
             return jax.lax.scan(body, x, ws)[0]
 
         c = jax.jit(f).lower(a, w).compile()
-        xla_flops = c.cost_analysis().get("flops", 0)
+        xla_flops = hlo_cost.xla_cost_dict(c).get("flops", 0)
         assert xla_flops < 0.2 * (12 * 2 * 128 ** 3)
 
 

@@ -9,7 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # deterministic shim keeps properties runnable
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.hamming import hamming_kernel
