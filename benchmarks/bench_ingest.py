@@ -1,0 +1,140 @@
+"""Continuous-ingest benchmark: add→searchable latency vs sealed corpus size.
+
+Before the segment layer, every `add()` after `build()` marked the engine
+dirty and the *next query* retrained quantizers and rebuilt the whole HNSW
+graph — O(N) work billed to one search, growing with the corpus.  With the
+segmented write path the batch lands in the delta segment (encode-only) and
+is served by an exact flat scan merged with the sealed index, so the
+add→searchable latency should be roughly independent of sealed-corpus size.
+
+Reported per sealed size N:
+  * add_ms        — wall time of `add(batch)` (encode + delta append)
+  * first_search_ms / steady_search_ms — next-query latency (the old design
+    paid the full rebuild here; now it is a delta scan + merge)
+  * seal_ms       — explicit `seal()` fold (graph rebuild, no retraining),
+    the amortized cost the old design hid inside a query
+  * recall@10     — sealed+delta fan-out vs a full rebuild over the same
+    rows (should match within noise), both against exact ground truth
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import EngineConfig, QuantixarEngine, SealPolicy, exact_knn
+from repro.core.hnsw_build import HNSWConfig
+from repro.core.pq import PQConfig
+from repro.data.synthetic import gaussian_mixture
+
+K = 10
+
+
+def _recall(ids: np.ndarray, gt: np.ndarray) -> float:
+    return float(np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / gt.shape[1]
+        for a, b in zip(ids, gt)]))
+
+
+def _make_engine(dim: int, quant: str) -> QuantixarEngine:
+    return QuantixarEngine(EngineConfig(
+        dim=dim, index="hnsw", quantization=quant, builder="bulk",
+        hnsw=HNSWConfig(M=16, ef_construction=80),
+        pq=PQConfig(m=8, k=64, iters=10),
+        # explicit seal() only: the bench measures the delta path itself
+        seal=SealPolicy(auto=False)))
+
+
+def run_size(n: int, dim: int, batch: int, n_queries: int,
+             quant: str, seed: int) -> Dict:
+    rng_seed = seed + n          # distinct corpora per size
+    corpus = gaussian_mixture(n, dim, n_clusters=32, scale=0.25,
+                              seed=rng_seed)
+    fresh = gaussian_mixture(batch, dim, n_clusters=32, scale=0.25,
+                             seed=rng_seed + 1)
+    queries = gaussian_mixture(n_queries, dim, n_clusters=32, scale=0.25,
+                               seed=rng_seed + 2)
+
+    eng = _make_engine(dim, quant)
+    eng.add(corpus)
+    eng.build()
+    eng.search(queries, K)       # warm the sealed-path compilation
+
+    t0 = time.perf_counter()
+    eng.add(fresh)
+    add_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    _, ids_first = eng.search(queries, K)
+    first_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _, ids = eng.search(queries, K)
+    steady_s = time.perf_counter() - t0
+    assert eng.index_builds == 1 and eng.quantizer_trains <= 1, \
+        "delta path rebuilt the sealed segment!"
+
+    full = np.concatenate([corpus, fresh])
+    gt = exact_knn(queries, full, K, metric="cosine")
+    rec_delta = _recall(ids, gt)
+
+    t0 = time.perf_counter()
+    eng.seal()
+    seal_s = time.perf_counter() - t0
+
+    # reference: full rebuild over the same rows (the old write path)
+    ref = _make_engine(dim, quant)
+    ref.add(full)
+    t0 = time.perf_counter()
+    ref.build()
+    rebuild_s = time.perf_counter() - t0
+    _, ids_ref = ref.search(queries, K)
+    rec_rebuild = _recall(ids_ref, gt)
+
+    return {
+        "n_sealed": n, "batch": batch, "quant": quant,
+        "add_ms": round(add_s * 1e3, 2),
+        "first_search_ms": round(first_s * 1e3, 2),
+        "steady_search_ms": round(steady_s * 1e3, 2),
+        "seal_ms": round(seal_s * 1e3, 1),
+        "full_rebuild_ms": round(rebuild_s * 1e3, 1),
+        "recall_delta": round(rec_delta, 4),
+        "recall_rebuild": round(rec_rebuild, 4),
+    }
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[2000, 8000, 32000])
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--quant", choices=["none", "pq"], default="none")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    print(f"# ingest bench: add {args.batch} rows into a sealed corpus, "
+          f"then query (dim={args.dim}, quant={args.quant})")
+    rows = []
+    for n in args.sizes:
+        r = run_size(n, args.dim, args.batch, args.queries,
+                     args.quant, args.seed)
+        rows.append(r)
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    if len(rows) >= 2:
+        lo, hi = rows[0], rows[-1]
+        growth = ((hi["add_ms"] + hi["steady_search_ms"])
+                  / max(lo["add_ms"] + lo["steady_search_ms"], 1e-9))
+        rebuild_growth = hi["full_rebuild_ms"] / max(lo["full_rebuild_ms"],
+                                                     1e-9)
+        print(f"# add→searchable grew {growth:.2f}x over a "
+              f"{hi['n_sealed'] // lo['n_sealed']}x corpus "
+              f"(full rebuild grew {rebuild_growth:.2f}x)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -140,10 +140,16 @@ class Collection:
 
     def compact(self) -> int:
         """Rebuild the engine over live rows only (drops tombstones, restores
-        graph quality).  Returns the number of rows reclaimed."""
+        graph quality).  Returns the number of rows reclaimed.
+
+        With no tombstones to reclaim this still folds the engine's delta
+        segment into the sealed index (`QuantixarEngine.seal()`), so
+        `compact()` doubles as the explicit merge hook of the segmented
+        write path."""
         with self._lock:
             dead = self.tombstones
             if dead == 0:
+                self._engine.seal()
                 return 0
             live_rows = [r for r, alive in enumerate(self._live) if alive]
             vectors = self._engine.vectors[live_rows]

@@ -1,4 +1,4 @@
 """Fault-tolerant checkpoint store (manifest + segments + WAL)."""
 
 from .store import (CheckpointStore, Manifest, ShardedCheckpoint,
-                    reshard_rows)
+                    replay_wal_into, reshard_rows)

@@ -231,6 +231,21 @@ class CheckpointStore:
                 os.remove(os.path.join(self.wal_dir, name))
 
 
+def replay_wal_into(store: "CheckpointStore", engine) -> int:
+    """Replay WAL insert batches into anything with `add(vectors, metadata)`
+    (a `QuantixarEngine`, typically restored via `from_state_dict`).
+
+    With the segmented write path the replayed rows land in the engine's
+    delta segment: crash recovery = load last generation + replay — no
+    quantizer retraining and no sealed-graph rebuild.  Returns rows replayed.
+    """
+    n = 0
+    for seg in store.wal_replay():
+        engine.add(seg["vectors"], seg["metadata"])
+        n += len(seg["vectors"])
+    return n
+
+
 # ---------------------------------------------------------------------------
 # Elastic resharding (row-partitioned corpora)
 # ---------------------------------------------------------------------------

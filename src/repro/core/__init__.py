@@ -11,6 +11,7 @@ from .metadata import And, Filter, MetadataStore, Not, Or, Predicate
 from .bq import BinaryQuantizer, BQConfig
 from .ivf import IVFConfig, IVFIndex
 from .pq import PQConfig, ProductQuantizer
+from .segment import DeltaSegment, SealPolicy, merge_candidates
 
 __all__ = [
     "available_metrics", "brute_force_topk", "get_metric", "normalize",
@@ -21,4 +22,5 @@ __all__ = [
     "And", "Filter", "MetadataStore", "Not", "Or", "Predicate",
     "BinaryQuantizer", "BQConfig", "IVFConfig", "IVFIndex",
     "PQConfig", "ProductQuantizer",
+    "DeltaSegment", "SealPolicy", "merge_candidates",
 ]

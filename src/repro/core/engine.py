@@ -14,13 +14,21 @@ device graph therefore stores the reconstruction (PQ) or sign (BQ) vectors,
 giving traversal orderings identical to code-domain arithmetic.  On a real TPU
 deployment the same traversal gathers codes and evaluates the Pallas ADC /
 Hamming kernels (see kernels/); numerics are the same by construction.
+
+Segmented write path (see segment.py): after the first `build()`, inserts
+land in a mutable **delta segment** — encode-only against the trained
+codebooks, exact flat scan at query time — while the **sealed segment**
+keeps its quantizers and graph.  `search()` fans out over sealed + delta and
+merges top-k in the sealed pass's distance space; `seal()` folds the delta
+into a new sealed segment (graph rebuild, no quantizer retraining) on the
+`SealPolicy` schedule instead of billing an O(N) rebuild to one query.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -33,6 +41,8 @@ from .hnsw_build import HNSWConfig, PackedHNSW, build, bulk_build, preprocess_ve
 from .ivf import IVFConfig, IVFIndex
 from .hnsw_search import to_device, search as hnsw_search
 from .metadata import Filter, MetadataStore
+from .segment import (ChunkedArray, DeltaSegment, SealPolicy,
+                      merge_candidates)
 
 
 @dataclasses.dataclass
@@ -51,6 +61,7 @@ class EngineConfig:
     rescore_multiplier: int = 4          # first pass fetches k * multiplier
     filter_flat_threshold: float = 0.10  # MEVS: selectivity below which we
     #                                      scan the filtered subset exactly
+    seal: SealPolicy = dataclasses.field(default_factory=SealPolicy)
 
     def __post_init__(self):
         if self.index not in ("hnsw", "flat", "ivf"):
@@ -68,18 +79,27 @@ class QuantixarEngine:
 
     def __init__(self, config: EngineConfig):
         self.config = config
-        self._vectors: List[np.ndarray] = []      # raw entity vectors (chunks)
+        self._vectors = ChunkedArray()            # raw entity vectors
         self._n = 0
         self.metadata = MetadataStore()
         self._pq: Optional[pq_mod.ProductQuantizer] = None
         self._bq: Optional[bq_mod.BinaryQuantizer] = None
-        self._codes: Optional[np.ndarray] = None   # pq codes or bq packed words
+        self._code_chunks = ChunkedArray()         # pq codes or bq packed words
         self._packed: Optional[PackedHNSW] = None
         self._device_graph = None                  # (HNSWGraph, max_level, metric)
         self._ivf: Optional[IVFIndex] = None
-        self._dirty = True
+        self._ivf_effective: Optional[np.ndarray] = None
+        self._dirty = True          # no usable sealed segment yet: build first
+        self._sealed_n = 0          # rows covered by the sealed segment
+        self._delta: Optional[DeltaSegment] = None  # exists once sealed
+        self._delta_cache = None    # (delta, version, eff_device, metric)
         self.build_seconds: float = 0.0
         self.insert_seconds: float = 0.0
+        # observability for the segmented write path: a post-build add() must
+        # bump none of these; seal() bumps seal/index, never quantizer_trains
+        self.index_builds = 0       # HNSW-graph / IVF-list constructions
+        self.quantizer_trains = 0   # PQ/BQ codebook (re)trainings
+        self.seals = 0              # delta -> sealed folds
 
     # ------------------------------------------------------------------ data
     def __len__(self) -> int:
@@ -87,15 +107,36 @@ class QuantixarEngine:
 
     @property
     def vectors(self) -> np.ndarray:
-        if not self._vectors:
-            return np.zeros((0, self.config.dim), dtype=np.float32)
-        if len(self._vectors) > 1:
-            self._vectors = [np.concatenate(self._vectors, axis=0)]
-        return self._vectors[0]
+        v = self._vectors.view()
+        return v if v is not None \
+            else np.zeros((0, self.config.dim), dtype=np.float32)
+
+    @property
+    def _codes(self) -> Optional[np.ndarray]:
+        """Full-corpus code matrix, concatenated lazily: a post-build add()
+        only appends its batch chunk — an eager concat would make every
+        quantized insert O(corpus) instead of O(batch)."""
+        return self._code_chunks.view()
+
+    @_codes.setter
+    def _codes(self, value: Optional[np.ndarray]) -> None:
+        self._code_chunks = ChunkedArray(
+            [] if value is None else [value])
+
+    @property
+    def delta_rows(self) -> int:
+        return len(self._delta) if self._delta is not None else 0
 
     def add(self, vectors: np.ndarray,
             metadata: Optional[Sequence[Optional[Dict[str, Any]]]] = None) -> None:
-        """Insert a batch of entities (vector + optional metadata record)."""
+        """Insert a batch of entities (vector + optional metadata record).
+
+        Before the first `build()` this only appends (the build is lazy).
+        After it, the batch lands in the delta segment: quantized engines
+        encode the rows against the existing codebooks (no retraining), the
+        sealed graph is untouched, and the rows are immediately searchable
+        via the exact delta scan.  The seal policy may then fold the delta.
+        """
         t0 = time.perf_counter()
         vectors = np.asarray(vectors, dtype=np.float32)
         if vectors.ndim != 2 or vectors.shape[1] != self.config.dim:
@@ -108,12 +149,34 @@ class QuantixarEngine:
         self._vectors.append(vectors)
         self._n += len(vectors)
         self.metadata.append_batch(metadata)
-        self._dirty = True
+        if self._dirty or self._delta is None:
+            self._dirty = True                    # first build covers everything
+        else:
+            codes = self._encode(vectors)
+            self._delta.append(vectors, codes)
+            if codes is not None:
+                self._code_chunks.append(codes)
+            if self.config.seal.auto and self.config.seal.should_seal(
+                    self._sealed_n, len(self._delta)):
+                self.seal()
         self.insert_seconds += time.perf_counter() - t0
+
+    def _encode(self, vectors: np.ndarray) -> Optional[np.ndarray]:
+        """Encode-only against trained codebooks (never retrains)."""
+        if self._pq is not None:
+            return np.asarray(self._pq.encode(jnp.asarray(vectors)))
+        if self._bq is not None:
+            return np.asarray(self._bq.encode(jnp.asarray(vectors)))
+        return None
 
     # ----------------------------------------------------------------- build
     def build(self, seed: int = 0) -> None:
-        """Train quantizers + build the index over everything inserted so far."""
+        """Train quantizers + build the index over everything inserted so far.
+
+        This is the full O(N) path — retrains codebooks and rebuilds the
+        graph.  Post-build inserts do *not* re-enter it; they ride the delta
+        segment until `seal()` folds them (encode-only, no retraining).
+        """
         t0 = time.perf_counter()
         cfg = self.config
         raw = self.vectors
@@ -126,13 +189,53 @@ class QuantixarEngine:
                     "cosine" if cfg.metric == "cosine" else "l2")))
             self._pq.train(jnp.asarray(raw), seed=seed)
             self._codes = np.asarray(self._pq.encode(jnp.asarray(raw)))
+            self.quantizer_trains += 1
         elif cfg.quantization == "bq":
             self._bq = bq_mod.BinaryQuantizer(cfg.bq)
             self._bq.train(jnp.asarray(raw), seed=seed)
             self._codes = np.asarray(self._bq.encode(jnp.asarray(raw)))
+            self.quantizer_trains += 1
         else:
             self._codes = None
 
+        self._ivf = None                    # full build retrains coarse centroids
+        self._build_index(raw, seed)
+        self._mark_sealed()
+        self._dirty = False
+        self.build_seconds = time.perf_counter() - t0
+
+    def seal(self, seed: int = 0) -> bool:
+        """Fold the delta segment into a new sealed segment.
+
+        Codebooks are reused (the delta rows were already encoded at insert),
+        so this rebuilds only the index structure — the size-/ratio-triggered
+        merge of the segmented write path, also reachable through
+        `Collection.compact()`.  Returns True if anything changed.
+        """
+        if self._dirty or self._delta is None:
+            if self._n == 0:
+                return False                # nothing inserted yet
+            self.build(seed)                # never built: full train + build
+            return True
+        if len(self._delta) == 0:
+            return False
+        t0 = time.perf_counter()
+        self._build_index(self.vectors, seed)
+        self._mark_sealed()
+        self.seals += 1
+        self.build_seconds = time.perf_counter() - t0
+        return True
+
+    def _mark_sealed(self) -> None:
+        self._sealed_n = self._n
+        self._delta = DeltaSegment(start=self._n, dim=self.config.dim)
+        self._delta_cache = None
+
+    def _build_index(self, raw: np.ndarray, seed: int) -> None:
+        """(Re)build the sealed index structure over `raw` using whatever
+        quantizers/codes currently exist — trains nothing except an IVF
+        coarse quantizer that does not exist yet."""
+        cfg = self.config
         if cfg.index == "hnsw":
             eff, eff_metric = self._effective_vectors()
             hnsw_cfg = dataclasses.replace(cfg.hnsw, metric=eff_metric)
@@ -148,16 +251,16 @@ class QuantixarEngine:
                 eff, eff_metric = self._effective_vectors()
             else:
                 eff, eff_metric = raw, cfg.metric
-            self._ivf = IVFIndex(dataclasses.replace(
-                cfg.ivf, metric="l2" if eff_metric != "cosine" else "cosine"))
-            self._ivf.train(jnp.asarray(raw), seed=seed)
+            if self._ivf is None or not self._ivf.is_trained:
+                self._ivf = IVFIndex(dataclasses.replace(
+                    cfg.ivf, metric="l2" if eff_metric != "cosine" else "cosine"))
+                self._ivf.train(jnp.asarray(raw), seed=seed)
             self._ivf.build_lists(jnp.asarray(raw))
             self._ivf_effective = eff
         else:
             self._packed = None
             self._device_graph = None
-        self._dirty = False
-        self.build_seconds = time.perf_counter() - t0
+        self.index_builds += 1
 
     def _effective_vectors(self) -> Tuple[np.ndarray, str]:
         """Vectors the graph traverses + the traversal metric (see module doc)."""
@@ -186,15 +289,23 @@ class QuantixarEngine:
         layer's tombstone liveness mask) AND-ed with the metadata filter.
         `rescore` overrides the config's exact-rescore setting per query.
 
+        The sealed segment is searched through its index; a non-empty delta
+        segment is exact-scanned in the same distance space and merged, so
+        freshly inserted rows are visible without any rebuild.  Masks and the
+        rescore pass apply across the sealed+delta union.
+
         Returns (distances (Q,k) in the engine metric, ids (Q,k); -1 = none).
         """
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
         if self._dirty:
             self.build()
         cfg = self.config
         queries = np.asarray(queries, dtype=np.float32)
         if queries.ndim == 1:
             queries = queries[None, :]
-        ef = ef or max(cfg.ef_search, k)
+        # `ef or ...` would silently turn an explicit ef=0 into the default
+        ef = ef if ef is not None else max(cfg.ef_search, k)
         flt_mask = self.metadata.evaluate(flt) if flt is not None else None
         if mask is not None:
             mask = np.asarray(mask, dtype=bool)
@@ -207,11 +318,20 @@ class QuantixarEngine:
         fetch = k * cfg.rescore_multiplier if do_rescore else k
 
         if cfg.index == "flat" or self._route_to_flat(mask):
+            # the flat scan covers the whole corpus (delta rows included:
+            # their codes were appended at insert time)
             d, ids = self._flat_pass(queries, fetch, mask)
-        elif cfg.index == "ivf":
-            d, ids = self._ivf_pass(queries, fetch, mask)
         else:
-            d, ids = self._hnsw_pass(queries, fetch, ef, mask)
+            if cfg.index == "ivf":
+                d, ids = self._ivf_pass(queries, fetch, mask)
+            else:
+                d, ids = self._hnsw_pass(queries, fetch, ef, mask)
+            if self.delta_rows:
+                dd, dids = self._delta_pass(queries, fetch, mask)
+                d, ids = merge_candidates(d, ids, dd, dids, fetch)
+            if mask is not None and (ids[:, : min(fetch, ids.shape[1])] == -1).any():
+                # beam under-delivered under the filter: exact masked scan
+                d, ids = self._flat_pass(queries, fetch, mask)
 
         if do_rescore:
             d, ids = self._rescore(queries, ids, k, mask=mask)
@@ -238,9 +358,8 @@ class QuantixarEngine:
             d = pq_mod.adc_distances(lut, jnp.asarray(self._codes))
             if mask_j is not None:
                 d = jnp.where(mask_j[None, :], d, jnp.inf)
-            neg_d, ids = jnp.array(-d), None
             import jax
-            neg_top, idx = jax.lax.top_k(neg_d, min(k, d.shape[1]))
+            neg_top, idx = jax.lax.top_k(-d, min(k, d.shape[1]))
             return np.asarray(-neg_top), np.asarray(idx, dtype=np.int32)
         if cfg.quantization == "bq":
             q_codes = self._bq.encode(jnp.asarray(queries))
@@ -256,11 +375,13 @@ class QuantixarEngine:
         return np.asarray(d), np.asarray(ids)
 
     def _hnsw_pass(self, queries, k, ef, mask):
+        """Beam-search the sealed graph only (delta rows merge separately)."""
         cfg = self.config
         g, max_level, metric = self._device_graph
+        n_sealed = self._packed.n
         ef_eff = max(ef, k)
         if mask is not None:
-            ef_eff = min(max(ef_eff * 2, k * 4), self._n)
+            ef_eff = min(max(ef_eff * 2, k * 4), n_sealed)
         q = queries
         if metric == "dot" and cfg.quantization == "none":
             q = preprocess_vectors(queries, cfg.metric)
@@ -271,38 +392,111 @@ class QuantixarEngine:
             q = signs * 2.0 - 1.0
         elif cfg.quantization == "pq" and cfg.metric == "cosine":
             q = preprocess_vectors(queries, "cosine")
-        d, ids = hnsw_search(g, jnp.asarray(q), k=min(ef_eff, self._n),
-                             ef=min(ef_eff, self._n), max_level=max_level,
+        d, ids = hnsw_search(g, jnp.asarray(q), k=min(ef_eff, n_sealed),
+                             ef=min(ef_eff, n_sealed), max_level=max_level,
                              metric=metric)
-        d, ids = np.asarray(d), np.asarray(ids)
-        if mask is not None:
-            allowed = np.concatenate([mask, [False]])  # -1 -> False
-            ok = allowed[ids]
-            d = np.where(ok, d, np.inf)
-            order = np.argsort(d, axis=1, kind="stable")
-            d = np.take_along_axis(d, order, axis=1)
-            ids = np.where(np.take_along_axis(ok, order, axis=1),
-                           np.take_along_axis(ids, order, axis=1), -1)
-            # top-up from exact masked scan if the beam under-delivered
-            if (ids[:, :k] == -1).any():
-                return self._flat_pass(queries, k, mask)
+        d, ids = self._apply_mask(np.asarray(d), np.asarray(ids),
+                                  mask, n_sealed)
         return d[:, :k], ids[:, :k]
 
     def _ivf_pass(self, queries, k, mask):
+        """Probe the sealed IVF lists only (delta rows merge separately)."""
         d, ids = self._ivf.search(jnp.asarray(self._ivf_effective),
                                   jnp.asarray(queries), k)
-        d, ids = np.asarray(d), np.asarray(ids)
-        if mask is not None:
-            allowed = np.concatenate([mask, [False]])
-            ok = allowed[ids]
-            d = np.where(ok, d, np.inf)
-            order = np.argsort(d, axis=1, kind="stable")
-            d = np.take_along_axis(d, order, axis=1)
-            ids = np.where(np.take_along_axis(ok, order, axis=1),
-                           np.take_along_axis(ids, order, axis=1), -1)
-            if (ids[:, : min(k, ids.shape[1])] == -1).any():
-                return self._flat_pass(queries, k, mask)
+        d, ids = self._apply_mask(np.asarray(d), np.asarray(ids),
+                                  mask, self._sealed_n)
         return d[:, :k], ids[:, :k]
+
+    @staticmethod
+    def _apply_mask(d, ids, mask, n_rows):
+        """Demote masked-out candidates to +inf/-1 and re-sort.  `mask` is
+        corpus-global; candidate ids come from the sealed structure, so only
+        its first `n_rows` entries apply (-1 padding maps to False)."""
+        if mask is None:
+            return d, ids
+        allowed = np.concatenate([mask[:n_rows], [False]])
+        ok = allowed[ids]
+        d = np.where(ok, d, np.inf)
+        order = np.argsort(d, axis=1, kind="stable")
+        d = np.take_along_axis(d, order, axis=1)
+        ids = np.where(np.take_along_axis(ok, order, axis=1),
+                       np.take_along_axis(ids, order, axis=1), -1)
+        return d, ids
+
+    def _delta_pass(self, queries, k, mask):
+        """Exact scan of the delta segment in the *sealed pass's* distance
+        space, so `merge_candidates` can interleave the two lists directly:
+
+          * hnsw + none  — graph traverses preprocessed raw vectors with the
+            device metric ("dot" for cosine/dot, "l2" for l2);
+          * hnsw + pq    — squared L2 to reconstructions (== ADC, exactly);
+          * hnsw + bq    — -dot of ±1 sign vectors (monotone in Hamming);
+          * ivf          — squared L2 of `_prep`-ed vectors, the same
+            contraction `_ivf_search` evaluates inside probed lists.
+
+        Returned ids are global (delta start offset applied).
+        """
+        cfg = self.config
+        delta = self._delta
+        n_d = len(delta)
+        eff_dev, metric = self._delta_effective()
+        if cfg.index == "ivf":
+            q = np.asarray(self._ivf._prep(jnp.asarray(queries)))
+        elif cfg.quantization == "pq":
+            q = preprocess_vectors(queries, "cosine") \
+                if cfg.metric == "cosine" else queries
+        elif cfg.quantization == "bq":
+            q = np.asarray(bq_mod.unpack_bits(
+                self._bq.encode(jnp.asarray(queries)), cfg.bq.bits),
+                dtype=np.float32) * 2.0 - 1.0
+        else:
+            q = preprocess_vectors(queries, cfg.metric)
+        padded = int(eff_dev.shape[0])
+        live = (np.ones(n_d, dtype=bool) if mask is None
+                else np.asarray(mask[delta.start:], dtype=bool))
+        if padded > n_d:
+            live = np.concatenate([live, np.zeros(padded - n_d, dtype=bool)])
+        d, ids = flat_search(jnp.asarray(q), eff_dev, min(k, padded),
+                             metric=metric, mask=jnp.asarray(live),
+                             base_index=delta.start)
+        return np.asarray(d), np.asarray(ids, dtype=np.int32)
+
+    def _delta_effective(self):
+        """Device-resident distance-space matrix for the delta scan, padded
+        to a power of two.  Its inputs only change on append, so it is
+        cached per (segment, version) — the padding additionally keeps the
+        jitted scan from retracing as the delta grows row by row.  Returns
+        (device matrix, flat_search metric)."""
+        cfg = self.config
+        delta = self._delta
+        cached = self._delta_cache
+        if (cached is not None and cached[0] is delta
+                and cached[1] == delta.version):
+            return cached[2], cached[3]
+        if cfg.index == "ivf":
+            eff = (np.asarray(self._pq.decode(jnp.asarray(delta.codes)))
+                   if cfg.quantization == "pq" else delta.raw)
+            eff = np.asarray(self._ivf._prep(jnp.asarray(eff)))
+            metric = "l2"
+        elif cfg.quantization == "pq":
+            eff = np.asarray(self._pq.decode(jnp.asarray(delta.codes)))
+            metric = "l2"
+        elif cfg.quantization == "bq":
+            eff = np.asarray(bq_mod.unpack_bits(
+                jnp.asarray(delta.codes), cfg.bq.bits),
+                dtype=np.float32) * 2.0 - 1.0
+            metric = "dot"
+        else:
+            eff = preprocess_vectors(delta.raw, cfg.metric)
+            metric = "l2" if cfg.metric == "l2" else "dot"
+        n_d = len(delta)
+        padded = 1 << max(0, n_d - 1).bit_length()
+        if padded > n_d:
+            eff = np.concatenate(
+                [eff, np.zeros((padded - n_d, eff.shape[1]), eff.dtype)])
+        eff_dev = jnp.asarray(eff)
+        self._delta_cache = (delta, delta.version, eff_dev, metric)
+        return eff_dev, metric
 
     def _rescore(self, queries, cand_ids, k, mask=None):
         """Exact re-ranking of quantized first-pass candidates (paper's
@@ -331,8 +525,9 @@ class QuantixarEngine:
         state: Dict[str, Any] = {
             "vectors": self.vectors,
             "n": np.array([self._n], dtype=np.int64),
-            # rows added after the last build() are only in `vectors`; the
-            # loader must rebuild rather than trust the serialized index
+            # rows in [0, sealed_n) are covered by the serialized index;
+            # rows beyond it round-trip as the delta segment (no rebuild)
+            "sealed_n": np.array([self._sealed_n], dtype=np.int64),
             "dirty": np.array([self._dirty]),
         }
         if self._codes is not None:
@@ -355,7 +550,8 @@ class QuantixarEngine:
     def from_state_dict(cls, config: EngineConfig,
                         state: Dict[str, Any]) -> "QuantixarEngine":
         eng = cls(config)
-        eng._vectors = [np.asarray(state["vectors"], dtype=np.float32)]
+        eng._vectors = ChunkedArray(
+            [np.asarray(state["vectors"], dtype=np.float32)])
         eng._n = int(state["n"][0])
         eng.metadata = MetadataStore.from_state_dict(
             {k[5:]: v for k, v in state.items() if k.startswith("meta.")})
@@ -370,12 +566,22 @@ class QuantixarEngine:
         if bq_state:
             eng._bq = bq_mod.BinaryQuantizer(config.bq)
             eng._bq.load_state_dict(bq_state)
+        sealed_n = int(state["sealed_n"][0]) if "sealed_n" in state else eng._n
         ivf_state = {k[4:]: v for k, v in state.items()
                      if k.startswith("ivf.")}
         if ivf_state:
-            eng._ivf = IVFIndex(config.ivf)
+            # mirror _build_index exactly: PQ probes reconstructions under L2
+            # (the ADC identity), everything else probes raw vectors under
+            # the engine metric — a mismatch here silently changes results
+            if config.quantization == "pq":
+                eng._ivf = IVFIndex(dataclasses.replace(config.ivf,
+                                                        metric="l2"))
+                eff, _ = eng._effective_vectors()
+            else:
+                eng._ivf = IVFIndex(config.ivf)
+                eff = eng.vectors
             eng._ivf.load_state_dict(ivf_state)
-            eng._ivf_effective, _ = eng._effective_vectors()
+            eng._ivf_effective = eff[:sealed_n]   # lists cover sealed rows only
             eng._dirty = False
         hnsw_state = {k[5:]: v for k, v in state.items()
                       if k.startswith("hnsw.")}
@@ -390,6 +596,14 @@ class QuantixarEngine:
             eng._dirty = False
         if "dirty" in state and bool(state["dirty"][0]):
             eng._dirty = True
+        if not eng._dirty:
+            # reconstruct the segment split: sealed index + delta tail
+            eng._sealed_n = sealed_n
+            eng._delta = DeltaSegment(start=sealed_n, dim=config.dim)
+            if eng._n > sealed_n:
+                tail_codes = (eng._codes[sealed_n:]
+                              if eng._codes is not None else None)
+                eng._delta.append(eng.vectors[sealed_n:], tail_codes)
         return eng
 
     def stats(self) -> Dict[str, Any]:
@@ -398,9 +612,19 @@ class QuantixarEngine:
                "quantization": self.config.quantization,
                "metric": self.config.metric,
                "build_seconds": self.build_seconds,
-               "insert_seconds": self.insert_seconds}
+               "insert_seconds": self.insert_seconds,
+               "sealed_rows": self._sealed_n,
+               "delta_rows": self.delta_rows,
+               "index_builds": self.index_builds,
+               "quantizer_trains": self.quantizer_trains,
+               "seals": self.seals}
         if self._packed is not None:
             out.update(self._packed.degree_stats())
+        if self._ivf is not None and self._ivf.list_sizes is not None:
+            sizes = np.asarray(self._ivf.list_sizes)
+            out["ivf_lists"] = int(sizes.shape[0])
+            out["ivf_mean_list"] = float(sizes.mean())
+            out["ivf_max_list"] = int(sizes.max())
         if self._pq is not None:
             out["compression"] = self._pq.compression_ratio(self.config.dim)
         if self._bq is not None:

@@ -105,6 +105,10 @@ class IVFIndex:
     def load_state_dict(self, state):
         self.centroids = jnp.asarray(state["centroids"])
         self.lists = jnp.asarray(state["lists"])
+        # list_sizes is derived state and is not serialized; recompute it so
+        # stats/routing on a restored index don't trip over None
+        self.list_sizes = np.asarray(
+            (np.asarray(self.lists) != PAD).sum(axis=1))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nprobe"))

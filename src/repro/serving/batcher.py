@@ -44,10 +44,14 @@ class Future:
         self._exc: Optional[BaseException] = None
 
     def set(self, value):
+        if self._ev.is_set():       # first resolution wins (close() may race
+            return                  # the worker on a straggling batch)
         self._value = value
         self._ev.set()
 
     def set_exception(self, exc: BaseException):
+        if self._ev.is_set():
+            return
         self._exc = exc
         self._ev.set()
 
@@ -71,24 +75,63 @@ class RequestBatcher:
         self._carry: Optional[Request] = None   # head of the next batch
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._running = True
+        self._state_lock = threading.Lock()   # serializes submit vs close
         self.batches_served = 0
         self.requests_served = 0
         self._thread.start()
 
     def submit(self, query: np.ndarray, k: int, **extras: Any) -> Future:
         """Enqueue one query.  `extras` (e.g. flt=..., ef=...) are forwarded
-        to search_fn; requests are only co-batched when their extras match."""
-        fut = Future()
-        self._q.put(Request(np.asarray(query, np.float32), k, fut,
-                            time.perf_counter(), dict(extras)))
-        return fut
+        to search_fn; requests are only co-batched when their extras match.
 
-    def close(self):
-        self._running = False
-        self._q.put(None)
-        self._thread.join(timeout=2)
+        Raises RuntimeError once `close()` has been called — the worker loop
+        is gone, so enqueueing would leave the future to dangle until the
+        caller's timeout."""
+        with self._state_lock:
+            if not self._running:
+                raise RuntimeError("batcher closed")
+            fut = Future()
+            self._q.put(Request(np.asarray(query, np.float32), k, fut,
+                                time.perf_counter(), dict(extras)))
+            return fut
+
+    def close(self, timeout: float = 2.0):
+        """Stop the worker.  Requests it never got to — queued behind the
+        shutdown sentinel or carried between batches — have their futures
+        failed with RuntimeError rather than silently dropped."""
+        with self._state_lock:
+            if not self._running:
+                return                        # idempotent
+            self._running = False
+            self._q.put(None)
+        self._thread.join(timeout=timeout)
+        # If the worker is still alive (stuck in a slow search_fn), it owns
+        # _carry and may be mid-pop on the queue; it sweeps both in its own
+        # exit path.  Sweeping here too covers the already-dead case and is
+        # idempotent (futures resolve first-wins).
+        self._fail_pending(RuntimeError("batcher closed"))
+
+    def _fail_pending(self, exc: BaseException) -> None:
+        carry, self._carry = self._carry, None
+        if carry is not None:
+            carry.future.set_exception(exc)
+        while True:
+            try:
+                req = self._q.get_nowait()
+            except queue.Empty:
+                return
+            if req is not None:
+                req.future.set_exception(exc)
 
     def _loop(self):
+        try:
+            self._serve_batches()
+        finally:
+            # a request popped between close()'s sweep and our exit would
+            # otherwise dangle (neither batched nor failed)
+            self._fail_pending(RuntimeError("batcher closed"))
+
+    def _serve_batches(self):
         while self._running:
             if self._carry is not None:
                 first, self._carry = self._carry, None

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import (CheckpointStore, ShardedCheckpoint,
-                              reshard_rows)
+                              replay_wal_into, reshard_rows)
 
 
 @pytest.fixture
@@ -75,6 +75,34 @@ class TestWAL:
         extra = [r["vectors"] for r in st2.wal_replay()]
         full = np.concatenate([base] + extra)
         assert full.shape == (13, 4)
+
+    def test_wal_replay_lands_in_delta_segment(self, store):
+        """Recovery = last generation + WAL replay, with no quantizer
+        retraining and no sealed-graph rebuild (segmented write path)."""
+        from repro.core import EngineConfig, QuantixarEngine, SealPolicy
+        from repro.core.hnsw_build import HNSWConfig
+        from repro.data.synthetic import gaussian_mixture
+
+        corpus = gaussian_mixture(300, 16, n_clusters=4, scale=0.2, seed=0)
+        fresh = gaussian_mixture(8, 16, n_clusters=4, scale=0.2, seed=1)
+        eng = QuantixarEngine(EngineConfig(
+            dim=16, builder="bulk", hnsw=HNSWConfig(M=8, ef_construction=40),
+            seal=SealPolicy(auto=False)))
+        eng.add(corpus)
+        eng.build()
+        store.save(eng.state_dict(), step=1)
+        store.wal_append(fresh, json.dumps([None] * len(fresh)))
+
+        # "restart": restore the sealed engine, replay the WAL tail
+        eng2 = QuantixarEngine.from_state_dict(eng.config,
+                                               store.load())
+        assert replay_wal_into(store, eng2) == len(fresh)
+        s = eng2.stats()
+        assert s["delta_rows"] == len(fresh) and s["sealed_rows"] == 300
+        _, ids = eng2.search(fresh[:2], 3)
+        assert 300 in set(ids[0].tolist()) and 301 in set(ids[1].tolist())
+        assert eng2.stats()["index_builds"] == 0
+        assert eng2.stats()["quantizer_trains"] == 0
 
 
 class TestElastic:

@@ -1,0 +1,353 @@
+"""Segmented write path: delta segment, seal policy, serving/persistence fixes.
+
+The contract under test (ISSUE 2): after `build()`, an `add()` must be
+searchable with no quantizer retraining and no sealed-graph rebuild
+(observed via the `index_builds` / `quantizer_trains` / `seals` counters in
+`stats()`), masks and rescore must apply across the sealed+delta union, and
+`seal()` folds the delta encode-only.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DeltaSegment, EngineConfig, Predicate,
+                        QuantixarEngine, SealPolicy, exact_knn,
+                        merge_candidates)
+from repro.core.hnsw_build import HNSWConfig
+from repro.core.ivf import IVFIndex, IVFConfig
+from repro.core.pq import PQConfig
+from repro.data.synthetic import gaussian_mixture
+from repro.serving.batcher import RequestBatcher
+
+N, N_EXTRA, DIM = 600, 60, 24
+NO_AUTOSEAL = SealPolicy(auto=False)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return gaussian_mixture(N, DIM, n_clusters=8, scale=0.2, seed=0)
+
+
+@pytest.fixture(scope="module")
+def extra():
+    return gaussian_mixture(N_EXTRA, DIM, n_clusters=8, scale=0.2, seed=1)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return gaussian_mixture(8, DIM, n_clusters=8, scale=0.2, seed=2)
+
+
+def _engine(corpus, meta=None, **kw):
+    kw.setdefault("hnsw", HNSWConfig(M=8, ef_construction=40))
+    kw.setdefault("pq", PQConfig(m=4, k=16, iters=6))
+    kw.setdefault("builder", "bulk")
+    kw.setdefault("seal", NO_AUTOSEAL)
+    eng = QuantixarEngine(EngineConfig(dim=DIM, **kw))
+    eng.add(corpus, meta)
+    eng.build()
+    return eng
+
+
+def _recall(ids, gt):
+    return np.mean([len(set(a.tolist()) & set(b.tolist())) / gt.shape[1]
+                    for a, b in zip(ids, gt)])
+
+
+# ---------------------------------------------------------------------------
+# Unit: segment primitives
+# ---------------------------------------------------------------------------
+
+class TestPrimitives:
+    def test_seal_policy_row_trigger(self):
+        p = SealPolicy(max_delta_rows=100, max_delta_ratio=10.0)
+        assert not p.should_seal(sealed_rows=1000, delta_rows=99)
+        assert p.should_seal(sealed_rows=1000, delta_rows=100)
+
+    def test_seal_policy_ratio_trigger(self):
+        p = SealPolicy(max_delta_rows=10**9, max_delta_ratio=0.5)
+        assert not p.should_seal(sealed_rows=1000, delta_rows=499)
+        assert p.should_seal(sealed_rows=1000, delta_rows=500)
+        # no sealed rows -> ratio trigger is meaningless
+        assert not p.should_seal(sealed_rows=0, delta_rows=499)
+
+    def test_delta_segment_global_ids_and_codes(self):
+        seg = DeltaSegment(start=100, dim=4)
+        seg.append(np.ones((3, 4), np.float32), np.zeros((3, 2), np.uint8))
+        seg.append(np.full((2, 4), 2.0, np.float32), np.ones((2, 2), np.uint8))
+        assert len(seg) == 5 and seg.start == 100 and seg.stop == 105
+        assert seg.raw.shape == (5, 4)
+        assert seg.codes.shape == (5, 2)
+        with pytest.raises(ValueError):
+            seg.append(np.ones((1, 4), np.float32))   # codes went missing
+
+    def test_merge_candidates_orders_and_pads(self):
+        d_a = np.array([[0.1, 0.5, np.inf]])
+        i_a = np.array([[3, 7, -1]])
+        d_b = np.array([[0.2, np.inf]])
+        i_b = np.array([[100, -1]])
+        d, i = merge_candidates(d_a, i_a, d_b, i_b, 4)
+        assert i[0].tolist() == [3, 100, 7, -1]
+        assert d[0, :3].tolist() == [pytest.approx(0.1), pytest.approx(0.2),
+                                     pytest.approx(0.5)]
+        assert np.isinf(d[0, 3])
+
+
+# ---------------------------------------------------------------------------
+# Engine: add-after-build rides the delta, no rebuild / no retraining
+# ---------------------------------------------------------------------------
+
+class TestSegmentedWritePath:
+    @pytest.mark.parametrize("index,quant", [
+        ("hnsw", "none"), ("hnsw", "pq"), ("hnsw", "bq"),
+        ("ivf", "none"), ("flat", "pq")])
+    def test_add_after_build_searchable_without_rebuild(
+            self, corpus, extra, queries, index, quant):
+        eng = _engine(corpus, index=index, quantization=quant)
+        s = eng.stats()
+        assert s["index_builds"] == 1 and s["sealed_rows"] == N
+        trains = s["quantizer_trains"]
+        assert trains == (0 if quant == "none" else 1)
+
+        eng.add(extra)
+        # querying a delta row by itself must surface its global id
+        _, ids = eng.search(extra[:4], 5)
+        for j in range(4):
+            assert N + j in set(ids[j].tolist()), (index, quant)
+        s = eng.stats()
+        assert s["index_builds"] == 1, "add() triggered a sealed rebuild"
+        assert s["quantizer_trains"] == trains, "add() retrained quantizers"
+        assert s["delta_rows"] == N_EXTRA and s["sealed_rows"] == N
+
+    def test_recall_across_union_matches_full_rebuild(
+            self, corpus, extra, queries):
+        full = np.concatenate([corpus, extra])
+        gt = exact_knn(queries, full, 10, metric="cosine")
+        eng = _engine(corpus)
+        eng.add(extra)
+        _, ids = eng.search(queries, 10)
+        rebuilt = _engine(full)
+        _, ids_rb = rebuilt.search(queries, 10)
+        assert _recall(ids, gt) >= _recall(ids_rb, gt) - 0.05
+
+    def test_seal_folds_encode_only(self, corpus, extra, queries):
+        eng = _engine(corpus, quantization="pq")
+        eng.add(extra)
+        assert eng.seal()
+        s = eng.stats()
+        assert s["seals"] == 1 and s["delta_rows"] == 0
+        assert s["sealed_rows"] == N + N_EXTRA
+        assert s["index_builds"] == 2          # graph rebuilt once by seal()
+        assert s["quantizer_trains"] == 1      # codebooks were NOT retrained
+        _, ids = eng.search(extra[:4], 5)
+        for j in range(4):
+            assert N + j in set(ids[j].tolist())
+        assert not eng.seal()                  # empty delta: no-op
+
+    def test_auto_seal_policy_triggers_on_add(self, corpus, extra):
+        eng = _engine(corpus, seal=SealPolicy(max_delta_rows=32,
+                                              max_delta_ratio=10.0))
+        eng.add(extra[:16])
+        assert eng.stats()["delta_rows"] == 16
+        eng.add(extra[16:])                    # 60 >= 32: policy fires
+        s = eng.stats()
+        assert s["seals"] == 1 and s["delta_rows"] == 0
+        assert s["sealed_rows"] == N + N_EXTRA
+
+    def test_filtered_rescored_union_agrees_with_oracle(
+            self, corpus, extra, queries):
+        meta = [{"cat": i % 4, "cat16": i % 16} for i in range(N)]
+        meta_x = [{"cat": i % 4, "cat16": i % 16} for i in range(N_EXTRA)]
+        eng = _engine(corpus, meta, quantization="pq",
+                      pq=PQConfig(m=8, k=32, iters=8),
+                      rescore=True, rescore_multiplier=8)
+        eng.add(extra, meta_x)
+        full = np.concatenate([corpus, extra])
+        cats = np.array([m["cat"] for m in meta + meta_x])
+        cats16 = np.array([m["cat16"] for m in meta + meta_x])
+
+        # 25% selectivity: masked beam over sealed graph + delta scan merge
+        d, ids = eng.search(queries, 5, flt=Predicate("cat", "eq", 2),
+                            ef=256, rescore=True)
+        valid = ids[ids >= 0]
+        assert len(valid) and (cats[valid] == 2).all()
+        allowed = np.where(cats == 2)[0]
+        gt = allowed[exact_knn(queries, full[allowed], 5, metric="cosine")]
+        assert _recall(ids, gt) >= 0.9
+
+        # 6.25% selectivity: routed to the exact masked scan over the union
+        d, ids = eng.search(queries, 5, flt=Predicate("cat16", "eq", 2),
+                            rescore=True)
+        valid = ids[ids >= 0]
+        assert len(valid) and (cats16[valid] == 2).all()
+        allowed = np.where(cats16 == 2)[0]
+        gt = allowed[exact_knn(queries, full[allowed], 5, metric="cosine")]
+        assert _recall(ids, gt) >= 0.99
+
+    def test_mask_never_resurfaces_across_union(self, corpus, extra, queries):
+        eng = _engine(corpus, quantization="pq", rescore=True)
+        eng.add(extra)
+        mask = np.ones(N + N_EXTRA, dtype=bool)
+        dead = list(range(0, N, 3)) + list(range(N, N + N_EXTRA, 2))
+        mask[dead] = False
+        _, ids = eng.search(queries, 10, mask=mask, rescore=True)
+        hit = set(ids[ids >= 0].tolist())
+        assert not hit & set(dead)
+
+    def test_persistence_roundtrip_keeps_delta(self, corpus, extra, queries):
+        eng = _engine(corpus, quantization="pq")
+        eng.add(extra)
+        d1, i1 = eng.search(queries, 10)
+        eng2 = QuantixarEngine.from_state_dict(eng.config, eng.state_dict())
+        s = eng2.stats()
+        assert s["delta_rows"] == N_EXTRA and s["sealed_rows"] == N
+        d2, i2 = eng2.search(queries, 10)
+        assert eng2.stats()["index_builds"] == 0, "restored engine rebuilt"
+        assert (i1 == i2).all()
+        np.testing.assert_allclose(d1, d2, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# API layer: collections ride the segmented write path
+# ---------------------------------------------------------------------------
+
+class TestCollectionSegments:
+    def _collection(self, corpus):
+        from repro.api import CollectionSchema, Database, VectorField
+        col = Database().create_collection(CollectionSchema(
+            name="seg", vector=VectorField(
+                dim=DIM, index="hnsw", builder="bulk",
+                hnsw=HNSWConfig(M=8, ef_construction=40))))
+        col.upsert([f"doc-{i}" for i in range(N)], corpus)
+        return col
+
+    def test_upsert_after_search_no_rebuild(self, corpus, extra):
+        col = self._collection(corpus)
+        col.search(corpus[:2], 3)              # forces the first build
+        builds = col.stats()["index_builds"]
+        col.upsert([f"new-{i}" for i in range(8)], extra[:8])
+        hits = col.query(extra[0]).top_k(3).run()
+        assert hits[0].id == "new-0"
+        s = col.stats()
+        assert s["index_builds"] == builds, "upsert rebuilt the sealed index"
+        assert s["delta_rows"] == 8
+        col.close()
+
+    def test_compact_without_tombstones_seals_delta(self, corpus, extra):
+        col = self._collection(corpus)
+        col.search(corpus[:2], 3)
+        col.upsert([f"new-{i}" for i in range(8)], extra[:8])
+        assert col.stats()["delta_rows"] == 8
+        assert col.compact() == 0              # nothing dead to reclaim...
+        s = col.stats()
+        assert s["delta_rows"] == 0 and s["seals"] == 1   # ...but delta folded
+        hits = col.query(extra[0]).top_k(3).run()
+        assert hits[0].id == "new-0"
+        col.close()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: search() argument validation (ef falsy bug, k >= 1)
+# ---------------------------------------------------------------------------
+
+class TestSearchValidation:
+    def test_k_must_be_positive(self, corpus, queries):
+        eng = _engine(corpus)
+        with pytest.raises(ValueError, match="k must be >= 1"):
+            eng.search(queries, 0)
+        with pytest.raises(ValueError, match="k must be >= 1"):
+            eng.search(queries, -3)
+
+    def test_explicit_ef_zero_is_honored(self, corpus, queries, monkeypatch):
+        """`ef or default` silently replaced ef=0 with the config default."""
+        eng = _engine(corpus)
+        seen = {}
+        orig = eng._hnsw_pass
+
+        def spy(q, k, ef, mask):
+            seen["ef"] = ef
+            return orig(q, k, ef, mask)
+
+        monkeypatch.setattr(eng, "_hnsw_pass", spy)
+        eng.search(queries, 5, ef=0)
+        assert seen["ef"] == 0                 # not cfg.ef_search (64)
+        eng.search(queries, 5)
+        assert seen["ef"] == eng.config.ef_search
+
+
+# ---------------------------------------------------------------------------
+# Satellite: IVF persistence keeps list_sizes
+# ---------------------------------------------------------------------------
+
+class TestIVFRestore:
+    def test_list_sizes_survive_roundtrip(self, corpus):
+        import jax.numpy as jnp
+        ivf = IVFIndex(IVFConfig(nlist=16))
+        ivf.train(jnp.asarray(corpus))
+        ivf.build_lists(jnp.asarray(corpus))
+        ivf2 = IVFIndex(IVFConfig(nlist=16))
+        ivf2.load_state_dict(ivf.state_dict())
+        assert ivf2.list_sizes is not None
+        np.testing.assert_array_equal(np.asarray(ivf2.list_sizes),
+                                      np.asarray(ivf.list_sizes))
+
+    def test_restored_engine_stats_do_not_crash(self, corpus, queries):
+        eng = _engine(corpus, index="ivf")
+        eng2 = QuantixarEngine.from_state_dict(eng.config, eng.state_dict())
+        s = eng2.stats()                       # used to die on list_sizes=None
+        assert s["ivf_lists"] == eng.config.ivf.nlist
+        assert s["ivf_mean_list"] > 0
+
+    @pytest.mark.parametrize("quant", ["none", "pq", "bq"])
+    def test_quantized_ivf_roundtrip_identical(self, corpus, queries, quant):
+        """Restore must mirror _build_index: PQ probes reconstructions under
+        L2, BQ/none probe raw vectors — a metric or effective-vector mismatch
+        silently changes (or crashes) restored searches."""
+        eng = _engine(corpus, index="ivf", quantization=quant)
+        d1, i1 = eng.search(queries, 10)
+        eng2 = QuantixarEngine.from_state_dict(eng.config, eng.state_dict())
+        d2, i2 = eng2.search(queries, 10)
+        assert (i1 == i2).all()
+        np.testing.assert_allclose(d1, d2, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: batcher shutdown semantics
+# ---------------------------------------------------------------------------
+
+def _echo_search(q, k):
+    return np.zeros((len(q), k), np.float32), np.zeros((len(q), k), np.int32)
+
+
+class TestBatcherClose:
+    def test_submit_after_close_raises(self):
+        b = RequestBatcher(_echo_search)
+        b.submit(np.zeros(4, np.float32), 2).result(timeout=5)
+        b.close()
+        with pytest.raises(RuntimeError, match="batcher closed"):
+            b.submit(np.zeros(4, np.float32), 2)
+
+    def test_close_is_idempotent(self):
+        b = RequestBatcher(_echo_search)
+        b.close()
+        b.close()
+
+    def test_queued_futures_fail_instead_of_hanging(self):
+        gate = threading.Event()
+
+        def slow(q, k):
+            gate.wait(5)
+            return _echo_search(q, k)
+
+        b = RequestBatcher(slow, max_batch=1, max_wait_ms=1.0)
+        f_inflight = b.submit(np.zeros(4, np.float32), 2)
+        time.sleep(0.05)                       # worker picks it up, blocks
+        f_queued = b.submit(np.zeros(4, np.float32), 2)
+        b.close(timeout=0.2)
+        with pytest.raises(RuntimeError, match="batcher closed"):
+            f_queued.result(timeout=1)
+        gate.set()                             # in-flight request completes
+        assert f_inflight.result(timeout=5)[0].shape == (2,)
