@@ -2,7 +2,7 @@
 
 PY ?= python
 
-.PHONY: test smoke ci
+.PHONY: test smoke serve-smoke serve bench-serve ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -10,4 +10,14 @@ test:
 smoke:
 	PYTHONPATH=src $(PY) examples/quickstart.py
 
-ci: test smoke
+serve-smoke:
+	PYTHONPATH=src $(PY) -m repro.launch.serve --smoke \
+		--n 5000 --dim 64 --index hnsw --requests 128
+
+serve:
+	PYTHONPATH=src $(PY) -m repro.launch.serve --serve --port 6333
+
+bench-serve:
+	PYTHONPATH=src $(PY) benchmarks/bench_serve.py
+
+ci: test smoke serve-smoke

@@ -1,0 +1,124 @@
+"""End-to-end serving benchmark: client -> HTTP -> service -> batcher.
+
+Measures the full request plane the way a user sees it: a live
+`ThreadingHTTPServer` in this process, `QuantixarClient` workers firing
+single-vector searches from a closed loop, and per-request wall-clock
+latency.  Reports JSON (QPS, p50/p99 ms, recall@k, batcher coalescing) so CI
+and `benchmarks/report.py`-style tooling can track serving regressions.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py --n 20000 --quant pq \
+        --requests 400 --concurrency 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.api import QuantixarClient
+from repro.core.hnsw_build import exact_knn
+from repro.data.synthetic import gaussian_mixture
+from repro.launch.serve import _recall_of, build_database
+from repro.serving.http import QuantixarHTTPServer
+from repro.serving.service import QuantixarService, ServiceConfig
+
+K = 10
+
+
+def run_bench(args) -> Dict:
+    db, corpus = build_database(args.n, args.dim, args.index, args.quant,
+                                max_batch=args.max_batch,
+                                max_wait_ms=args.max_wait_ms)
+    col_embedded = db["corpus"]
+    # build outside the timed window
+    col_embedded.query(gaussian_mixture(1, args.dim, seed=5)[0]).top_k(1).run()
+
+    service = QuantixarService(db, ServiceConfig(
+        default_max_batch=args.max_batch,
+        default_max_wait_ms=args.max_wait_ms))
+    server = QuantixarHTTPServer(service).start()
+    client = QuantixarClient(server.url, timeout=60)
+    col = client.collection("corpus")
+
+    queries = gaussian_mixture(args.requests, args.dim, seed=99)
+    gt = exact_knn(queries, corpus, K, metric="cosine")
+
+    latencies: List[float] = [0.0] * args.requests
+    results: List = [None] * args.requests
+    cursor = iter(range(args.requests))
+    cursor_lock = threading.Lock()
+
+    errors: List[str] = []
+
+    def worker():
+        while True:
+            with cursor_lock:
+                i = next(cursor, None)
+            if i is None:
+                return
+            t0 = time.perf_counter()
+            try:
+                results[i] = col.query(queries[i]).top_k(K).run()
+            except Exception as exc:          # noqa: BLE001 — keep measuring
+                errors.append(f"request {i}: {exc}")
+            latencies[i] = (time.perf_counter() - t0) * 1e3
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=worker)
+               for _ in range(args.concurrency)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+
+    done = [(r, t, l) for r, t, l in zip(results, gt, latencies)
+            if r is not None]
+    if not done:
+        raise RuntimeError(f"every request failed; first: {errors[:3]}")
+    recall = _recall_of([r for r, _, _ in done], [t for _, t, _ in done], K)
+    stats = col.stats()
+    lat = np.asarray([l for _, _, l in done])
+    out = {
+        "bench": "serve_e2e",
+        "n": args.n, "dim": args.dim, "index": args.index,
+        "quant": args.quant, "k": K,
+        "requests": args.requests, "concurrency": args.concurrency,
+        "max_batch": args.max_batch, "max_wait_ms": args.max_wait_ms,
+        "wall_s": round(wall, 4),
+        "qps": round(args.requests / wall, 1),
+        "p50_ms": round(float(np.percentile(lat, 50)), 3),
+        "p99_ms": round(float(np.percentile(lat, 99)), 3),
+        "mean_ms": round(float(lat.mean()), 3),
+        "recall": round(recall, 4),
+        "failed": len(errors),
+        "batches_served": stats["serving_batches_served"],
+        "requests_batched": stats["serving_requests_served"],
+    }
+    if errors:
+        out["first_errors"] = errors[:3]
+    server.shutdown()
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--index", default="hnsw", choices=["hnsw", "flat", "ivf"])
+    ap.add_argument("--quant", default="none", choices=["none", "pq", "bq"])
+    ap.add_argument("--requests", type=int, default=400)
+    ap.add_argument("--concurrency", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    args = ap.parse_args()
+    print(json.dumps(run_bench(args), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,8 @@
 
 Covers: declarative schema (vector field + typed metadata), string-id
 upsert, fluent filtered queries, quantized collections with rescore,
-delete/tombstone + compact, and Database save/load persistence.
+delete/tombstone + compact, Database save/load persistence, and client mode
+(the same fluent query over the embedded HTTP server via QuantixarClient).
 """
 
 import os
@@ -102,6 +103,35 @@ def main():
         print(f"Database save/load round-trip identical: {same}")
         print(f"collections on disk: {db2.list_collections()}")
         db2.close()
+
+    # 6. Client mode: the same surface over the wire ------------------------
+    # The service plane wraps this very Database in an embedded HTTP server;
+    # QuantixarClient mirrors Database/Collection, so the query above runs
+    # unchanged over REST (single-vector wire searches coalesce through the
+    # serving batcher on the server side).
+    from repro.api import QuantixarClient  # noqa: E402
+    from repro.serving.http import QuantixarHTTPServer  # noqa: E402
+    from repro.serving.service import QuantixarService  # noqa: E402
+
+    server = QuantixarHTTPServer(QuantixarService(db)).start()
+    client = QuantixarClient(server.url)
+    remote = client.collection("items")
+    wire_hits = (remote.query(queries[0])
+                 .filter(category="cat-3", in_stock=True)
+                 .where("price", "lt", 50)
+                 .top_k(5)
+                 .run())
+    embedded_hits = (items.query(queries[0])
+                     .filter(category="cat-3", in_stock=True)
+                     .where("price", "lt", 50)
+                     .top_k(5)
+                     .run())
+    print(f"client mode @ {server.url}: wire == embedded hits: "
+          f"{[h.id for h in wire_hits] == [h.id for h in embedded_hits]}")
+    serving_stats = {k: v for k, v in remote.stats().items()
+                     if k.startswith("serving_")}
+    print(f"server-side serving stats: {serving_stats}")
+    server.shutdown(close_service=False)
     db.close()
 
 

@@ -1,5 +1,7 @@
 """Quantixar public API: schema-driven vector data management.
 
+Embedded:
+
     from repro.api import (Database, CollectionSchema, VectorField,
                            KeywordField, NumericField)
 
@@ -11,22 +13,39 @@
     col.upsert(["doc-1"], vec[None, :], [{"lang": "en", "stars": 4}])
     hits = col.query(q).filter(lang="en").where("stars", "ge", 3).run()
 
+Over the wire (same surface, against `repro.serving.http`):
+
+    from repro.api import QuantixarClient
+
+    client = QuantixarClient("http://127.0.0.1:6333")
+    col = client.collection("docs")
+    hits = col.query(q).filter(lang="en").top_k(5).run()
+
 The engine (`repro.core.engine.QuantixarEngine`) stays the internal
 per-collection backend; this layer adds named collections, declarative typed
-schemas, stable string ids with upsert/delete/compact semantics, and a
-fluent filtered query builder routed through the serving batcher.
+schemas, stable string ids with upsert/delete/compact semantics, a fluent
+filtered query builder routed through the serving batcher, and the versioned
+wire protocol (`repro.api.requests`) + HTTP client for the service plane.
 """
 
 from ..core.metadata import And, Filter, Not, Or, Predicate
-from .collection import Collection, Entity
+from .client import QuantixarClient, RemoteCollection
+from .collection import (Collection, CollectionClosed, Entity,
+                         QueryRetriesExhausted)
 from .database import Database
 from .query import Hit, Query
-from .schema import (BoolField, CollectionSchema, KeywordField,
+from .requests import (ApiError, ErrorInfo, RemoteInvalidArgument,
+                       RemoteNotFound, RemoteSchemaError, RemoteUnavailable)
+from .schema import (BatcherConfig, BoolField, CollectionSchema, KeywordField,
                      MetadataField, NumericField, SchemaError, VectorField)
 
 __all__ = [
     "And", "Filter", "Not", "Or", "Predicate",
-    "Collection", "Entity", "Database", "Hit", "Query",
-    "BoolField", "CollectionSchema", "KeywordField", "MetadataField",
-    "NumericField", "SchemaError", "VectorField",
+    "Collection", "CollectionClosed", "Entity", "Database", "Hit", "Query",
+    "QueryRetriesExhausted",
+    "QuantixarClient", "RemoteCollection",
+    "ApiError", "ErrorInfo", "RemoteInvalidArgument", "RemoteNotFound",
+    "RemoteSchemaError", "RemoteUnavailable",
+    "BatcherConfig", "BoolField", "CollectionSchema", "KeywordField",
+    "MetadataField", "NumericField", "SchemaError", "VectorField",
 ]

@@ -27,7 +27,7 @@ from ..core.engine import QuantixarEngine
 from ..core.metadata import Filter
 from ..serving.batcher import RequestBatcher
 from .query import Hit, Query, validate_filter
-from .schema import CollectionSchema, SchemaError
+from .schema import BatcherConfig, CollectionSchema, SchemaError
 
 
 @dataclasses.dataclass
@@ -37,6 +37,16 @@ class Entity:
     id: str
     vector: np.ndarray
     payload: Dict[str, Any]
+
+
+class CollectionClosed(RuntimeError):
+    """Query raced close()/drop: the batcher is gone and must not be
+    resurrected.  Typed so the service plane maps it to UNAVAILABLE."""
+
+
+class QueryRetriesExhausted(RuntimeError):
+    """Every retry of a batched query was invalidated by a concurrent
+    compact(); the caller saw no stale data, just no answer — retryable."""
 
 
 def _as_id_list(ids: Union[str, Sequence[str]]) -> List[str]:
@@ -55,6 +65,8 @@ class Collection:
         self._live: List[bool] = []      # row -> liveness (False = tombstone)
         self._row_of: Dict[str, int] = {}   # live id -> row
         self._batcher: Optional[RequestBatcher] = None
+        self._batcher_init_lock = threading.Lock()
+        self._closed = False
         self._mask: Optional[np.ndarray] = None   # cached liveness mask
         self._epoch = 0        # bumped by compact(): row numbers change
         # one engine is shared between caller threads (2-D queries, writes)
@@ -183,7 +195,11 @@ class Collection:
                rescore: Optional[bool] = None,
                ) -> Tuple[np.ndarray, np.ndarray]:
         """Engine-level batch search with tombstones masked out.  Returns
-        (distances, rows) — use `query()` for string-id `Hit` results."""
+        (distances, rows) — use `query()` for string-id `Hit` results.
+
+        An empty collection answers with the engine's padding convention
+        (all-inf distances, row -1) instead of raising, so shard fan-outs
+        and the serving plane see "no results", not an error."""
         if flt is not None:
             flt = validate_filter(self.schema, flt)
         return self._engine_search(np.asarray(vectors, np.float32), k,
@@ -214,8 +230,13 @@ class Collection:
     def _engine_search(self, queries, k, flt=None, ef=None, rescore=None):
         with self._lock:
             if len(self._row_of) == 0:
-                raise SchemaError(
-                    f"collection {self.name!r} is empty; upsert() first")
+                # empty collection = empty result, not an error: pad with
+                # the engine's masked-slot convention (inf distance, row -1)
+                if k < 1:
+                    raise ValueError(f"k must be >= 1, got {k}")
+                n = 1 if queries.ndim == 1 else len(queries)
+                return (np.full((n, k), np.inf, dtype=np.float32),
+                        np.full((n, k), -1, dtype=np.int64))
             k = min(k, len(self._row_of))
             return self._engine.search(queries, k, flt=flt, ef=ef,
                                        mask=self._live_mask(),
@@ -223,11 +244,28 @@ class Collection:
 
     @property
     def batcher(self) -> RequestBatcher:
-        """Lazily-started serving batcher (single-vector query path)."""
-        if self._batcher is None:
-            self._batcher = RequestBatcher(self._engine_search,
-                                           max_batch=32, max_wait_ms=2.0)
-        return self._batcher
+        """Lazily-started serving batcher (single-vector query path); its
+        batch size/deadline come from the schema's `BatcherConfig`.
+
+        Creation is locked — concurrent first queries (e.g. parallel HTTP
+        threads) must share one batcher, not leak a second worker whose
+        counters and requests vanish — but the hot path stays lock-free so
+        submits keep enqueueing while the worker (which takes the collection
+        lock to search) is mid-batch."""
+        batcher = self._batcher
+        if batcher is None:
+            with self._batcher_init_lock:
+                if self._closed:     # don't resurrect past close()/drop —
+                    raise CollectionClosed(   # that leaks a worker thread
+                        f"collection {self.name!r} is closed")
+                batcher = self._batcher
+                if batcher is None:
+                    cfg = self.schema.batcher or BatcherConfig()
+                    batcher = RequestBatcher(self._engine_search,
+                                             max_batch=cfg.max_batch,
+                                             max_wait_ms=cfg.max_wait_ms)
+                    self._batcher = batcher
+        return batcher
 
     def _hits_for(self, d: np.ndarray, rows: np.ndarray,
                   include_vector: bool) -> List[Hit]:
@@ -261,18 +299,27 @@ class Collection:
             with self._lock:
                 if self._epoch == epoch:
                     return self._hits_for(d, rows, include_vector)
-        raise RuntimeError(
+        raise QueryRetriesExhausted(
             f"collection {self.name!r} kept compacting during the query")
 
     def close(self) -> None:
-        if self._batcher is not None:
-            self._batcher.close()
-            self._batcher = None
+        with self._batcher_init_lock:
+            self._closed = True
+            batcher, self._batcher = self._batcher, None
+        if batcher is not None:
+            batcher.close()
 
     def stats(self) -> Dict[str, Any]:
         out = self._engine.stats()
         out.update({"name": self.name, "live": len(self),
                     "tombstones": self.tombstones})
+        # serving counters: all-zero until the batcher path first runs.
+        # snapshot the attribute — a concurrent close() may null it between
+        # the check and the call
+        batcher = self._batcher
+        serving = (batcher.stats() if batcher is not None
+                   else RequestBatcher.zero_stats())
+        out.update({f"serving_{k}": v for k, v in serving.items()})
         return out
 
     # ----------------------------------------------------------- persistence
@@ -297,6 +344,8 @@ class Collection:
         col._row_of = {i: r for r, (i, alive)
                        in enumerate(zip(col._ids, col._live)) if alive}
         col._batcher = None
+        col._batcher_init_lock = threading.Lock()
+        col._closed = False
         col._mask = None
         col._epoch = 0
         col._lock = threading.RLock()

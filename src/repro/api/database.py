@@ -9,11 +9,13 @@ full typed API surface (schemas included) from disk alone.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Union
 
 from ..checkpoint.store import CheckpointStore
 from .collection import Collection
-from .schema import CollectionSchema, MetadataField, SchemaError, VectorField
+from .schema import (BatcherConfig, CollectionSchema, MetadataField,
+                     SchemaError, VectorField)
 
 _SEP = "/"          # namespaces collection arrays inside one checkpoint
 
@@ -30,15 +32,19 @@ class Database:
             schema: Optional[CollectionSchema] = None, *,
             name: Optional[str] = None,
             vector: Optional[VectorField] = None,
-            fields: Sequence[MetadataField] = ()) -> Collection:
+            fields: Sequence[MetadataField] = (),
+            batcher: Optional[BatcherConfig] = None) -> Collection:
         """Create from a full `CollectionSchema`, or from name/vector/fields
-        keyword parts."""
+        keyword parts; `batcher=` tunes the serving-batcher knobs
+        (`BatcherConfig(max_batch=..., max_wait_ms=...)`)."""
         if schema is None:
             if name is None or vector is None:
                 raise SchemaError(
                     "pass a CollectionSchema or name= and vector=")
             schema = CollectionSchema(name=name, vector=vector,
-                                      fields=tuple(fields))
+                                      fields=tuple(fields), batcher=batcher)
+        elif batcher is not None:
+            schema = dataclasses.replace(schema, batcher=batcher)
         if schema.name in self._collections:
             raise SchemaError(f"collection {schema.name!r} already exists")
         col = Collection(schema)

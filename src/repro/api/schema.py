@@ -170,6 +170,35 @@ class VectorField:
         return cls(**d)
 
 
+# ------------------------------------------------------------ batcher config
+@dataclasses.dataclass(frozen=True)
+class BatcherConfig:
+    """Serving-batcher knobs for a collection's single-vector query path.
+
+    `max_batch` caps how many coalesced queries form one padded engine batch;
+    `max_wait_ms` bounds how long the first request waits for company (the
+    tail-latency cap at low QPS).  Declared on the schema so the service
+    plane can tune them per collection instead of the old hardcoded values.
+    """
+
+    max_batch: int = 32
+    max_wait_ms: float = 2.0
+
+    def __post_init__(self):
+        if not isinstance(self.max_batch, int) or self.max_batch < 1:
+            raise SchemaError(
+                f"batcher max_batch must be a positive int, "
+                f"got {self.max_batch!r}")
+        if not isinstance(self.max_wait_ms, (int, float)) \
+                or self.max_wait_ms < 0:
+            raise SchemaError(
+                f"batcher max_wait_ms must be >= 0, got {self.max_wait_ms!r}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"max_batch": self.max_batch,
+                "max_wait_ms": float(self.max_wait_ms)}
+
+
 # --------------------------------------------------------------------- schema
 @dataclasses.dataclass(frozen=True)
 class CollectionSchema:
@@ -178,6 +207,10 @@ class CollectionSchema:
     name: str
     vector: VectorField
     fields: Tuple[MetadataField, ...] = ()
+    # None = unspecified: the collection falls back to BatcherConfig()
+    # defaults, and the service plane may substitute its own defaults —
+    # an explicit BatcherConfig always wins over both
+    batcher: Optional[BatcherConfig] = None
 
     def __post_init__(self):
         if not self.name or not isinstance(self.name, str):
@@ -222,12 +255,22 @@ class CollectionSchema:
         return out
 
     def to_dict(self) -> Dict[str, Any]:
-        return {"name": self.name, "vector": self.vector.to_dict(),
-                "fields": [f.to_dict() for f in self.fields]}
+        out = {"name": self.name, "vector": self.vector.to_dict(),
+               "fields": [f.to_dict() for f in self.fields]}
+        if self.batcher is not None:
+            out["batcher"] = self.batcher.to_dict()
+        return out
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "CollectionSchema":
+        batcher = d.get("batcher")
+        if batcher is not None and not isinstance(batcher, dict):
+            raise SchemaError(     # don't silently drop an operator's tuning
+                f"batcher must be an object like "
+                f"{{'max_batch': 32, 'max_wait_ms': 2.0}}, got {batcher!r}")
         return cls(name=d["name"],
                    vector=VectorField.from_dict(d["vector"]),
                    fields=tuple(field_from_dict(f)
-                                for f in d.get("fields", ())))
+                                for f in d.get("fields", ())),
+                   batcher=(BatcherConfig(**batcher) if batcher is not None
+                            else None))

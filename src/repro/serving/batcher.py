@@ -63,6 +63,14 @@ class Future:
         return self._value
 
 
+class BatcherClosed(RuntimeError):
+    """Submit after close(), or a request stranded by shutdown.  Typed so
+    the service plane can map it to UNAVAILABLE without string matching."""
+
+    def __init__(self, message: str = "batcher closed"):
+        super().__init__(message)
+
+
 class RequestBatcher:
     """Pads/batches requests; flushes on max_batch or max_wait_ms."""
 
@@ -78,6 +86,7 @@ class RequestBatcher:
         self._state_lock = threading.Lock()   # serializes submit vs close
         self.batches_served = 0
         self.requests_served = 0
+        self.carried_requests = 0   # extras-incompatible heads deferred once
         self._thread.start()
 
     def submit(self, query: np.ndarray, k: int, **extras: Any) -> Future:
@@ -89,11 +98,24 @@ class RequestBatcher:
         caller's timeout."""
         with self._state_lock:
             if not self._running:
-                raise RuntimeError("batcher closed")
+                raise BatcherClosed()
             fut = Future()
             self._q.put(Request(np.asarray(query, np.float32), k, fut,
                                 time.perf_counter(), dict(extras)))
             return fut
+
+    @staticmethod
+    def zero_stats() -> Dict[str, int]:
+        """Counter shape for collections whose batcher never started."""
+        return {"batches_served": 0, "requests_served": 0,
+                "carried_requests": 0, "queue_depth": 0}
+
+    def stats(self) -> Dict[str, int]:
+        """Serving observability counters (`/stats` endpoint feed)."""
+        return {"batches_served": self.batches_served,
+                "requests_served": self.requests_served,
+                "carried_requests": self.carried_requests,
+                "queue_depth": self._q.qsize()}
 
     def close(self, timeout: float = 2.0):
         """Stop the worker.  Requests it never got to — queued behind the
@@ -109,7 +131,7 @@ class RequestBatcher:
         # _carry and may be mid-pop on the queue; it sweeps both in its own
         # exit path.  Sweeping here too covers the already-dead case and is
         # idempotent (futures resolve first-wins).
-        self._fail_pending(RuntimeError("batcher closed"))
+        self._fail_pending(BatcherClosed())
 
     def _fail_pending(self, exc: BaseException) -> None:
         carry, self._carry = self._carry, None
@@ -129,7 +151,7 @@ class RequestBatcher:
         finally:
             # a request popped between close()'s sweep and our exit would
             # otherwise dangle (neither batched nor failed)
-            self._fail_pending(RuntimeError("batcher closed"))
+            self._fail_pending(BatcherClosed())
 
     def _serve_batches(self):
         while self._running:
@@ -154,6 +176,7 @@ class RequestBatcher:
                     break
                 if nxt.extras_key != first.extras_key:
                     self._carry = nxt       # incompatible: heads next batch
+                    self.carried_requests += 1
                     break
                 batch.append(nxt)
             try:
@@ -165,10 +188,12 @@ class RequestBatcher:
                 for r in batch:
                     r.future.set_exception(exc)
                 continue
-            for i, r in enumerate(batch):
-                r.future.set((d[i, : r.k], ids[i, : r.k]))
+            # count before resolving: a caller reading stats() right after
+            # its result arrives must see this batch reflected
             self.batches_served += 1
             self.requests_served += len(batch)
+            for i, r in enumerate(batch):
+                r.future.set((d[i, : r.k], ids[i, : r.k]))
 
 
 class QuorumFanout:

@@ -97,6 +97,23 @@ class TestSchemaValidation:
         assert s2 == s
         assert s2.vector.pq.m == 8
 
+    def test_batcher_config(self, corpus):
+        from repro.api import BatcherConfig
+        with pytest.raises(SchemaError):
+            BatcherConfig(max_batch=0)
+        with pytest.raises(SchemaError):
+            BatcherConfig(max_wait_ms=-1.0)
+        s = dataclasses.replace(
+            _schema(), batcher=BatcherConfig(max_batch=4, max_wait_ms=7.0))
+        assert CollectionSchema.from_dict(s.to_dict()).batcher == s.batcher
+        # create_collection(batcher=...) threads through to the live batcher
+        col = Database().create_collection(
+            _schema(), batcher=BatcherConfig(max_batch=4, max_wait_ms=7.0))
+        col.upsert(_ids(10), corpus[:10], _payloads(10))
+        assert col.batcher.max_batch == 4
+        assert col.batcher.max_wait == pytest.approx(0.007)
+        col.close()
+
     def test_upsert_shape_and_id_errors(self, corpus):
         col = Database().create_collection(_schema())
         with pytest.raises(SchemaError):
@@ -150,8 +167,18 @@ class TestCrud:
             col.query(queries[0]).where("category", "lt", "x")
         with pytest.raises(SchemaError):
             col.query(queries[0]).include("nope")
-        with pytest.raises(SchemaError):
-            Database().create_collection(_schema()).query(queries[0]).run()
+
+    def test_empty_collection_returns_empty(self, queries):
+        """Empty collection = empty result (the old SchemaError turned into
+        a 500 through any transport)."""
+        col = Database().create_collection(_schema())
+        assert col.query(queries[0]).run() == []
+        assert col.query(queries[:3]).run() == [[], [], []]
+        d, rows = col.search(queries, k=4)
+        assert d.shape == rows.shape == (len(queries), 4)
+        assert np.isinf(d).all() and (rows == -1).all()
+        d, ids = col.search_ids(queries[:2], k=3)
+        assert all(i is None for i in ids.ravel())
 
 
 class TestQueryParity:

@@ -1,0 +1,458 @@
+"""Service plane: wire protocol, QuantixarService, HTTP server, client.
+
+The core contract: the same CRUD/search/filter scenarios pass embedded
+(`Database`) and over the wire (`QuantixarClient` -> live ThreadingHTTPServer
+-> `QuantixarService`), single-vector wire searches coalesce through the
+`RequestBatcher`, and every error path returns a structured `ErrorInfo` —
+never a traceback body.
+"""
+
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.api import (And, BatcherConfig, BoolField, Database, KeywordField,
+                       Not, NumericField, Predicate, QuantixarClient,
+                       SchemaError, VectorField)
+from repro.api import requests as rq
+from repro.api.collection import CollectionClosed, QueryRetriesExhausted
+from repro.data.synthetic import gaussian_mixture
+from repro.serving.http import QuantixarHTTPServer
+from repro.serving.service import QuantixarService, ServiceConfig
+
+N, DIM = 400, 24
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return gaussian_mixture(N, DIM, n_clusters=6, scale=0.2, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return gaussian_mixture(6, DIM, n_clusters=6, scale=0.2, seed=3)
+
+
+@pytest.fixture()
+def server():
+    srv = QuantixarHTTPServer(QuantixarService(Database())).start()
+    yield srv
+    srv.shutdown()
+
+
+@pytest.fixture()
+def client(server):
+    return QuantixarClient(server.url, timeout=30)
+
+
+@pytest.fixture(params=["embedded", "wire"])
+def backend(request, server):
+    """Either API entry point; the scenarios below must pass on both."""
+    if request.param == "embedded":
+        db = Database()
+        yield db
+        db.close()
+    else:
+        yield QuantixarClient(server.url, timeout=30)
+
+
+def _ids(n=N):
+    return [f"item-{i}" for i in range(n)]
+
+
+def _payloads(n=N):
+    return [{"category": f"cat-{i % 4}", "price": float(i % 50),
+             "in_stock": i % 3 == 0} for i in range(n)]
+
+
+def _make(backend, corpus, name="items", n=N, batcher=None, **vector_kw):
+    vector_kw.setdefault("dim", DIM)
+    vector_kw.setdefault("index", "flat")
+    col = backend.create_collection(
+        name=name, vector=VectorField(**vector_kw),
+        fields=(KeywordField("category"), NumericField("price"),
+                BoolField("in_stock")),
+        batcher=batcher)
+    col.upsert(_ids(n), corpus[:n], _payloads(n))
+    return col
+
+
+# ---------------------------------------------------------------- scenarios
+# Each test here runs twice: once against Database, once against
+# QuantixarClient -> HTTP -> QuantixarService.
+class TestBackendParity:
+    def test_crud_roundtrip(self, backend, corpus):
+        col = _make(backend, corpus)
+        e = col.get("item-7")
+        assert e.id == "item-7" and e.payload["category"] == "cat-3"
+        np.testing.assert_allclose(e.vector, corpus[7])
+        assert col.get("missing") is None
+        assert "item-7" in col and "missing" not in col
+
+        col.upsert("item-7", corpus[0], [{"category": "cat-0", "price": 1.0}])
+        e2 = col.get("item-7")
+        np.testing.assert_allclose(e2.vector, corpus[0])
+        assert e2.payload["category"] == "cat-0"
+
+        assert col.delete("item-7") == 1
+        assert col.delete("item-7") == 0
+        assert col.get("item-7") is None
+        assert len(col) == N - 1
+
+    def test_filtered_search(self, backend, corpus, queries):
+        col = _make(backend, corpus)
+        hits = (col.query(queries[0])
+                .filter(category="cat-1")
+                .where("price", "lt", 30)
+                .top_k(5)
+                .run())
+        assert 0 < len(hits) <= 5
+        for h in hits:
+            assert h.payload["category"] == "cat-1"
+            assert h.payload["price"] < 30
+        # full tree (And of predicates) survives the codec
+        flt = And((Predicate("category", "eq", "cat-2"),
+                   Predicate("in_stock", "eq", True)))
+        for h in col.query(queries[1]).filter(flt).top_k(4).run():
+            assert h.payload["category"] == "cat-2"
+            assert h.payload["in_stock"] is True
+
+    def test_batch_query_and_include_vector(self, backend, corpus, queries):
+        col = _make(backend, corpus)
+        rows = col.query(queries).top_k(3).run()          # 2-D -> batch
+        assert len(rows) == len(queries)
+        single = col.query(queries[2]).top_k(3).include("vector").run()
+        assert [h.id for h in single] == [h.id for h in rows[2]]
+        assert all(h.vector is not None and h.vector.shape == (DIM,)
+                   for h in single)
+
+    def test_empty_collection_returns_empty(self, backend, queries):
+        col = backend.create_collection(
+            name="fresh", vector=VectorField(dim=DIM, index="flat"))
+        assert col.query(queries[0]).top_k(5).run() == []
+        batch = col.query(queries[:3]).top_k(5).run()
+        assert batch == [[], [], []]
+
+    def test_compact_preserves_results(self, backend, corpus, queries):
+        col = _make(backend, corpus)
+        col.delete([f"item-{i}" for i in range(40)])
+        before = [h.id for h in col.query(queries[2]).top_k(10).run()]
+        assert col.compact() == 40
+        after = [h.id for h in col.query(queries[2]).top_k(10).run()]
+        assert after == before
+
+    def test_error_parity(self, backend, corpus, queries):
+        col = _make(backend, corpus)
+        with pytest.raises(SchemaError):
+            col.query(queries[0][:8])                     # wrong dim
+        with pytest.raises(SchemaError):
+            col.query(queries[0]).filter(unknown=1)       # unknown field
+        with pytest.raises(SchemaError):                  # lt on keyword
+            col.query(queries[0]).where("category", "lt", "x")
+        with pytest.raises(SchemaError):
+            col.upsert([""], corpus[:1])                  # empty id
+        with pytest.raises(SchemaError):                  # duplicate create
+            backend.create_collection(
+                name="items", vector=VectorField(dim=DIM))
+        with pytest.raises(KeyError):
+            backend.drop_collection("never-existed")
+        with pytest.raises(KeyError):
+            backend.collection("never-existed")
+
+    def test_management(self, backend):
+        backend.create_collection(name="a", vector=VectorField(dim=4))
+        backend.create_collection(name="b", vector=VectorField(dim=4))
+        assert set(backend.list_collections()) >= {"a", "b"}
+        assert backend["a"].name == "a" and "a" in backend
+        backend.drop_collection("a")
+        assert "a" not in backend.list_collections()
+
+
+# -------------------------------------------------------------- wire details
+class TestWire:
+    def test_wire_matches_embedded_hit_for_hit(self, client, corpus, queries):
+        remote = _make(client, corpus, index="hnsw")
+        db = Database()
+        embedded = _make(db, corpus, index="hnsw")
+        flt = And((Predicate("category", "eq", "cat-1"),
+                   Predicate("price", "lt", 30)))
+        for qi in range(3):
+            wire = remote.query(queries[qi]).filter(flt).top_k(5).run()
+            local = embedded.query(queries[qi]).filter(flt).top_k(5).run()
+            assert [(h.id, pytest.approx(h.score, rel=1e-5)) for h in wire] \
+                == [(h.id, h.score) for h in local]
+        db.close()
+
+    def test_single_vector_searches_coalesce(self, server, client, corpus,
+                                             queries):
+        remote = _make(client, corpus,
+                       batcher=BatcherConfig(max_batch=16, max_wait_ms=20.0))
+        n_requests, per = 4, 8
+        results = [None] * (n_requests * per)
+
+        def worker(base):
+            for j in range(per):
+                results[base + j] = (remote.query(queries[base % len(queries)])
+                                     .top_k(5).run())
+
+        threads = [threading.Thread(target=worker, args=(i * per,))
+                   for i in range(n_requests)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert all(r is not None for r in results)
+
+        stats = remote.stats()
+        served = stats["serving_requests_served"]
+        batches = stats["serving_batches_served"]
+        assert served >= n_requests * per
+        assert batches < served          # coalescing actually happened
+        # and the server-side collection object confirms the same counters
+        col = server.service.db.collection("items")
+        assert col.batcher.batches_served == batches
+
+    def test_batcher_config_reaches_server(self, server, client):
+        client.create_collection(
+            name="tuned", vector=VectorField(dim=8, index="flat"),
+            batcher=BatcherConfig(max_batch=7, max_wait_ms=11.0))
+        col = server.service.db.collection("tuned")
+        assert col.schema.batcher == BatcherConfig(max_batch=7,
+                                                   max_wait_ms=11.0)
+        assert col.batcher.max_batch == 7
+        assert col.batcher.max_wait == pytest.approx(0.011)
+
+    def test_service_default_batcher_applied(self):
+        service = QuantixarService(
+            config=ServiceConfig(default_max_batch=5, default_max_wait_ms=9.0))
+        schema = {"name": "c", "vector": {"dim": 4, "index": "flat"}}
+        out = service.dispatch(rq.CreateCollection(schema=schema))
+        assert isinstance(out, rq.CollectionInfo)
+        assert service.db.collection("c").schema.batcher == BatcherConfig(
+            max_batch=5, max_wait_ms=9.0)
+        service.close()
+
+    def test_snapshot_restore_over_api(self, client, corpus, queries,
+                                       tmp_path):
+        remote = _make(client, corpus)
+        remote.delete(["item-0", "item-1"])
+        before = [h.id for h in remote.query(queries[0]).top_k(5).run()]
+        gen = client.snapshot(str(tmp_path), step=2)
+        assert gen == 1
+
+        remote.delete([f"item-{i}" for i in range(2, 50)])   # post-snapshot
+        assert client.restore(str(tmp_path)) == ["items"]
+        restored = client.collection("items")
+        assert len(restored) == N - 2                        # damage undone
+        assert [h.id for h in
+                restored.query(queries[0]).top_k(5).run()] == before
+
+    def test_serving_stats_exposed(self, client, corpus, queries):
+        remote = _make(client, corpus)
+        for _ in range(3):
+            remote.query(queries[0]).top_k(3).run()
+        stats = remote.stats()
+        for key in ("serving_batches_served", "serving_requests_served",
+                    "serving_carried_requests", "serving_queue_depth"):
+            assert key in stats
+        assert stats["serving_requests_served"] >= 3
+        assert stats["serving_batches_served"] >= 1
+        # whole-database stats include the per-collection block
+        assert client.stats()["items"]["live"] == N
+
+
+class TestStructuredErrors:
+    """Every failure must be a JSON ErrorInfo envelope — never a traceback."""
+
+    @staticmethod
+    def _raw(server, method, path, body=None):
+        data = None if body is None else body.encode()
+        req = urllib.request.Request(server.url + path, data=data,
+                                     method=method)
+        try:
+            with urllib.request.urlopen(req, timeout=30) as resp:
+                return resp.status, json.loads(resp.read().decode())
+        except urllib.error.HTTPError as exc:
+            return exc.code, json.loads(exc.read().decode())
+
+    @pytest.mark.parametrize("method,path,body,status,code", [
+        ("GET", "/nope", None, 404, rq.NOT_FOUND),
+        ("GET", "/v1/collections/ghost", None, 404, rq.NOT_FOUND),
+        ("POST", "/v1/collections/ghost/search", '{"vector": [1, 2]}',
+         404, rq.NOT_FOUND),
+        ("POST", "/v1/collections", '{"schema": "not-a-dict"}',
+         400, rq.INVALID_ARGUMENT),
+        # missing "name" in the schema is a bad request, not a 404
+        ("POST", "/v1/collections", '{"schema": {"vector": {"dim": 4}}}',
+         400, rq.INVALID_ARGUMENT),
+        ("POST", "/v1/collections", 'not json at all',
+         400, rq.INVALID_ARGUMENT),
+        ("POST", "/v1/snapshot", '{"bogus_key": 1}',
+         400, rq.INVALID_ARGUMENT),
+        ("POST", "/v1/rpc", '{"op": "no_such_op"}',
+         400, rq.INVALID_ARGUMENT),
+        ("POST", "/v1/rpc", '{"v": 99, "op": "health"}',
+         400, rq.INVALID_ARGUMENT),
+    ])
+    def test_error_envelopes(self, server, method, path, body, status, code):
+        got_status, envelope = self._raw(server, method, path, body)
+        assert got_status == status
+        assert envelope["ok"] is False
+        assert envelope["error"]["code"] == code
+        assert "Traceback" not in json.dumps(envelope)
+
+    def test_schema_error_is_400(self, server, client, corpus):
+        _make(client, corpus, n=50)
+        status, envelope = self._raw(
+            server, "POST", "/v1/collections/items/search",
+            json.dumps({"vector": [1.0, 2.0], "k": 3}))   # wrong dim
+        assert status == 400
+        assert envelope["error"]["code"] == rq.SCHEMA_ERROR
+        # malformed filter node (missing "column") is 400, not 404/500
+        status, envelope = self._raw(
+            server, "POST", "/v1/collections/items/search",
+            json.dumps({"vector": [0.0] * DIM, "k": 3,
+                        "filter": {"pred": {"op": "eq"}}}))
+        assert status == 400
+        assert envelope["error"]["code"] == rq.INVALID_ARGUMENT
+
+    def test_rpc_envelope_roundtrip(self, server, client, corpus):
+        _make(client, corpus, n=50)
+        status, envelope = self._raw(
+            server, "POST", "/v1/rpc",
+            json.dumps(rq.Stats(collection="items").to_dict()))
+        assert status == 200 and envelope["ok"] is True
+        assert envelope["result"]["stats"]["live"] == 50
+
+
+class TestServerLifecycle:
+    def test_shutdown_without_start_does_not_hang(self):
+        srv = QuantixarHTTPServer(QuantixarService(Database()))
+        srv.shutdown()                       # never started: must return
+
+    def test_closed_collection_does_not_resurrect_batcher(self, corpus,
+                                                          queries):
+        """A query racing close()/drop must fail typed, not leak a fresh
+        batcher worker against a dropped collection."""
+        db = Database()
+        col = db.create_collection(
+            name="doomed", vector=VectorField(dim=DIM, index="flat"))
+        col.upsert(_ids(20), corpus[:20], None)
+        col.query(queries[0]).top_k(2).run()     # batcher alive
+        db.drop_collection("doomed")
+        with pytest.raises(CollectionClosed):
+            col.query(queries[0]).top_k(2).run()
+        assert col._batcher is None               # nothing resurrected
+        db.close()
+
+    def test_client_timeout_forwarded(self, client, corpus, queries):
+        col = _make(client, corpus, n=50)
+        # generous per-query timeout must still succeed end to end
+        hits = col.query(queries[0]).top_k(3).run(timeout=30.0)
+        assert len(hits) == 3
+
+
+class TestProtocolCodec:
+    def test_filter_tree_roundtrip(self):
+        flt = And((Predicate("category", "in", ("a", "b")),
+                   Not(Predicate("price", "ge", 10.0))))
+        d = rq.filter_to_dict(flt)
+        assert rq.filter_from_dict(json.loads(json.dumps(d))) == flt
+
+    def test_request_envelope_roundtrip(self):
+        req = rq.Search(collection="c", vector=[1.0, 2.0], k=3,
+                        filter=rq.filter_to_dict(Predicate("x", "eq", "y")),
+                        ef=32, include_vector=True)
+        decoded = rq.decode_request(json.loads(json.dumps(req.to_dict())))
+        assert decoded == req and not decoded.batched
+        batch = rq.Search(collection="c", vector=[[1.0], [2.0]], k=1)
+        assert rq.decode_request(batch.to_dict()).batched
+
+    def test_decode_rejects_garbage(self):
+        with pytest.raises(rq.ApiError) as err:
+            rq.decode_request({"op": "search", "body": {"bogus": 1}})
+        assert err.value.code == rq.INVALID_ARGUMENT
+        with pytest.raises(rq.ApiError):
+            rq.decode_request([1, 2, 3])
+
+    def test_error_info_taxonomy(self):
+        info = rq.ErrorInfo("SOMETHING_ELSE", "x")
+        assert info.code == rq.INTERNAL       # unknown codes degrade safely
+        exc = rq.error_to_exception(rq.ErrorInfo(rq.SCHEMA_ERROR, "bad"))
+        assert isinstance(exc, SchemaError)
+        exc = rq.error_to_exception(rq.ErrorInfo(rq.NOT_FOUND, "gone"))
+        assert isinstance(exc, KeyError)
+
+
+class TestConcurrentStress:
+    def test_epoch_retry_never_returns_stale_ids(self, corpus):
+        """Queries racing upserts and compactions must never surface a stale
+        row translation: every hit's payload tag must equal its id."""
+        n = 120
+        db = Database()
+        col = db.create_collection(
+            name="stress", vector=VectorField(dim=DIM, index="flat"),
+            fields=(KeywordField("tag"),),
+            batcher=BatcherConfig(max_batch=8, max_wait_ms=1.0))
+        ids = [f"p-{i}" for i in range(n)]
+        col.upsert(ids, corpus[:n], [{"tag": i} for i in ids])
+
+        stop = threading.Event()
+        errors = []
+        retries_exhausted = [0]
+
+        def querier(seed):
+            rng = np.random.RandomState(seed)
+            while not stop.is_set():
+                vec = corpus[rng.randint(n)]
+                try:
+                    hits = col.query(vec).top_k(8).run(timeout=30)
+                except QueryRetriesExhausted:
+                    retries_exhausted[0] += 1         # allowed: no stale data
+                    continue
+                except RuntimeError as exc:
+                    errors.append(repr(exc))
+                    return
+                for h in hits:
+                    if h.payload.get("tag") != h.id:
+                        errors.append(
+                            f"stale hit: id={h.id} tag={h.payload.get('tag')}")
+                        return
+
+        def writer():
+            rng = np.random.RandomState(7)
+            while not stop.is_set():
+                i = rng.randint(n)
+                try:
+                    col.upsert(ids[i], rng.randn(DIM).astype(np.float32),
+                               [{"tag": ids[i]}])
+                except Exception as exc:              # noqa: BLE001
+                    errors.append(f"writer: {exc!r}")
+                    return
+
+        def compactor():
+            while not stop.is_set():
+                try:
+                    col.compact()
+                except Exception as exc:              # noqa: BLE001
+                    errors.append(f"compactor: {exc!r}")
+                    return
+                stop.wait(0.02)
+
+        threads = ([threading.Thread(target=querier, args=(s,))
+                    for s in range(3)]
+                   + [threading.Thread(target=writer),
+                      threading.Thread(target=compactor)])
+        for t in threads:
+            t.start()
+        import time
+        time.sleep(2.5)
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+        db.close()
+        assert errors == []
