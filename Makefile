@@ -2,10 +2,21 @@
 
 PY ?= python
 
-.PHONY: test smoke serve-smoke serve bench-serve ci
+.PHONY: test smoke serve-smoke serve bench bench-smoke bench-serve ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# full HNSW width x ef sweep -> BENCH_hnsw.json at the repo root
+# (timestamp passed in at the make boundary, not sampled by the writer)
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only table1 \
+		--out BENCH_hnsw.json --timestamp $$(date +%s)
+
+# CI-sized sweep with a recall floor: perf PRs can't trade away quality
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only table1 --fast \
+		--out BENCH_hnsw.json --timestamp $$(date +%s) --min-recall 0.9
 
 smoke:
 	PYTHONPATH=src $(PY) examples/quickstart.py

@@ -2,19 +2,29 @@
 
 Reports the paper's metrics: construction time (graph build machinery),
 insertion time, search time at ef ∈ {64, 128}, recall rate, last-distances
-ratio, mean fraction of neighbours returned, and QPS.
+ratio, mean fraction of neighbours returned, and QPS — now swept over the
+wide-beam ``expansion_width`` as well, with the device loop's per-query
+iteration counter reported (`mean_iters`/`max_iters`): the sequential
+while-loop trip count is the hot-path bottleneck the wide beam attacks, and
+vmapped batches step until the *slowest* query finishes.
 
 Offline-container deltas (DESIGN.md §8): datasets are statistically matched
 synthetics; corpus sizes are scaled to the CPU budget (the paper ran 60k/1M
 on a t4g.xlarge for hours) with the scale factor printed; wall-clock numbers
-are host-CPU and NOT comparable to the paper's instance — recall/ratio
-metrics are the comparable part.
+are host-CPU and NOT comparable to the paper's instance — recall/ratio/
+iteration metrics are the comparable part.
+
+`benchmarks/run.py --only table1 --out BENCH_hnsw.json` (the `make bench`
+entry) persists the sweep as JSON at the repo root so the perf trajectory is
+tracked across PRs; the timestamp is passed in by the caller, never sampled
+ambiently here.
 """
 
 from __future__ import annotations
 
+import json
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -26,11 +36,14 @@ from repro.core.hnsw_search import search, to_device
 from repro.data.synthetic import fashion_mnist_like, sift_like
 
 K = 10
+DEFAULT_WIDTHS = (1, 2, 4)
 
 
 def run_dataset(name: str, corpus: np.ndarray, queries: np.ndarray,
                 metric: str = "l2", builder: str = "incremental",
-                ef_values=(64, 128)) -> List[Dict]:
+                ef_values: Sequence[int] = (64, 128),
+                widths: Sequence[int] = DEFAULT_WIDTHS,
+                repeats: int = 3) -> List[Dict]:
     cfg = HNSWConfig(M=16, ef_construction=100, metric=metric)
     t0 = time.perf_counter()
     build_fn = incremental_build if builder == "incremental" else bulk_build
@@ -44,49 +57,99 @@ def run_dataset(name: str, corpus: np.ndarray, queries: np.ndarray,
           - preprocess_vectors(corpus, metric)[gt]) ** 2).sum(-1), axis=1)
 
     rows = []
+    qn = preprocess_vectors(queries, metric)
+    corpus_n = preprocess_vectors(corpus, metric)
+    q_dev = jnp.asarray(qn)
     for ef in ef_values:
-        q_dev = jnp.asarray(preprocess_vectors(queries, metric))
-        # warm (compile)
-        search(g, q_dev[:4], k=K, ef=ef, max_level=max_level,
-               metric=dev_metric)[1].block_until_ready()
-        t0 = time.perf_counter()
-        d, ids = search(g, q_dev, k=K, ef=ef, max_level=max_level,
-                        metric=dev_metric)
-        ids.block_until_ready()
-        t_search = time.perf_counter() - t0
-        ids_np = np.asarray(ids)
-        rec = recall_at_k(ids_np, gt)
-        filled = (ids_np >= 0).mean()
-        # last-distances ratio (ann-benchmarks): found kth / true kth
-        found_vecs = preprocess_vectors(corpus, metric)[
-            np.maximum(ids_np[:, -1], 0)]
-        qn = preprocess_vectors(queries, metric)
-        found_last = ((qn - found_vecs) ** 2).sum(-1)
-        ldr = float(np.mean(np.sqrt(np.maximum(found_last, 1e-12))
-                            / np.sqrt(np.maximum(gt_d[:, -1], 1e-12))))
-        rows.append({
-            "dataset": name, "builder": builder, "ef": ef,
-            "n": len(corpus), "construction_s": round(t_build, 3),
-            "search_s": round(t_search, 4),
-            "qps": round(len(queries) / t_search, 1),
-            "recall": round(rec, 4),
-            "fraction_returned": round(float(filled), 4),
-            "last_dist_ratio": round(ldr, 4),
-        })
+        for width in widths:
+            # warm at the timed shape so QPS measures the search, not XLA;
+            # best-of-`repeats` timing (timeit-style) rejects machine-load
+            # noise that would otherwise swamp the width comparison
+            search(g, q_dev, k=K, ef=ef, max_level=max_level,
+                   metric=dev_metric, expansion_width=width,
+                   with_iters=True)[1].block_until_ready()
+            t_search = float("inf")
+            for _ in range(max(1, repeats)):
+                t0 = time.perf_counter()
+                d, ids, iters = search(g, q_dev, k=K, ef=ef,
+                                       max_level=max_level,
+                                       metric=dev_metric,
+                                       expansion_width=width,
+                                       with_iters=True)
+                ids.block_until_ready()
+                t_search = min(t_search, time.perf_counter() - t0)
+            ids_np = np.asarray(ids)
+            iters_np = np.asarray(iters)
+            rec = recall_at_k(ids_np, gt)
+            filled = (ids_np >= 0).mean()
+            # last-distances ratio (ann-benchmarks): found kth / true kth
+            found_vecs = corpus_n[np.maximum(ids_np[:, -1], 0)]
+            found_last = ((qn - found_vecs) ** 2).sum(-1)
+            ldr = float(np.mean(np.sqrt(np.maximum(found_last, 1e-12))
+                                / np.sqrt(np.maximum(gt_d[:, -1], 1e-12))))
+            rows.append({
+                "dataset": name, "builder": builder, "ef": ef,
+                "width": width,
+                "n": len(corpus), "construction_s": round(t_build, 3),
+                "search_s": round(t_search, 4),
+                "qps": round(len(queries) / t_search, 1),
+                "recall": round(rec, 4),
+                "mean_iters": round(float(iters_np.mean()), 1),
+                "max_iters": int(iters_np.max()),
+                "fraction_returned": round(float(filled), 4),
+                "last_dist_ratio": round(ldr, 4),
+            })
     return rows
 
 
+def write_report(rows: List[Dict], out_path: str, timestamp: float,
+                 meta: Optional[Dict] = None) -> None:
+    """Persist the sweep as JSON.  `timestamp` is supplied by the caller
+    (CLI flag / CI env), keeping the report a pure function of its inputs."""
+    report = {
+        "bench": "hnsw",
+        "timestamp": timestamp,
+        "k": K,
+        "rows": rows,
+    }
+    if meta:
+        report["meta"] = meta
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+
+def check_recall_floor(rows: List[Dict], min_recall: float) -> List[str]:
+    """Recall floor over the *widest* beam at the *largest* ef per dataset —
+    the serving default at its quality setting — so perf PRs cannot silently
+    trade recall for QPS.  (Small-ef rows are latency points; their recall
+    is a property of ef, not of the traversal.)"""
+    failures = []
+    widest = max(r["width"] for r in rows)
+    top_ef = max(r["ef"] for r in rows)
+    for r in rows:
+        if (r["width"] == widest and r["ef"] == top_ef
+                and r["recall"] < min_recall):
+            failures.append(
+                f"{r['dataset']} ef={r['ef']} width={r['width']}: "
+                f"recall {r['recall']:.4f} < floor {min_recall}")
+    return failures
+
+
 def main(n_fmnist: int = 6000, n_sift: int = 8000, n_queries: int = 200,
-         builder: str = "incremental"):
+         builder: str = "incremental",
+         widths: Sequence[int] = DEFAULT_WIDTHS,
+         ef_values: Sequence[int] = (64, 128)) -> List[Dict]:
     print(f"# Table I reproduction (scaled: fmnist {n_fmnist}/60k, "
-          f"sift {n_sift}/1M; builder={builder})")
+          f"sift {n_sift}/1M; builder={builder}; widths={tuple(widths)})")
     rows = []
     rows += run_dataset("fashion-mnist-784",
                         fashion_mnist_like(n_fmnist, seed=0),
                         fashion_mnist_like(n_queries, seed=1),
-                        builder=builder)
+                        builder=builder, widths=widths, ef_values=ef_values)
     rows += run_dataset("sift-128", sift_like(n_sift, seed=0),
-                        sift_like(n_queries, seed=1), builder=builder)
+                        sift_like(n_queries, seed=1), builder=builder,
+                        widths=widths, ef_values=ef_values)
     for r in rows:
         print(",".join(f"{k}={v}" for k, v in r.items()))
     return rows

@@ -260,6 +260,7 @@ class RemoteCollection:
     # ------------------------------------------------------------- internals
     def _run_query(self, vec: np.ndarray, k: int, flt: Optional[Filter],
                    ef: Optional[int], rescore: Optional[bool],
+                   expansion_width: Optional[int],
                    include_vector: bool, timeout: float):
         """`Query.run` backend: one `Search` request (single or batch)."""
         body: Dict[str, Any] = {"vector": vec.tolist(), "k": k}
@@ -269,6 +270,8 @@ class RemoteCollection:
             body["ef"] = ef
         if rescore is not None:
             body["rescore"] = rescore
+        if expansion_width is not None:
+            body["expansion_width"] = expansion_width
         if include_vector:
             body["include_vector"] = True
         # honor Query.run(timeout=...) like the embedded Future.result does

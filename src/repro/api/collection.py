@@ -193,6 +193,7 @@ class Collection:
     def search(self, vectors: np.ndarray, k: int,
                flt: Optional[Filter] = None, ef: Optional[int] = None,
                rescore: Optional[bool] = None,
+               expansion_width: Optional[int] = None,
                ) -> Tuple[np.ndarray, np.ndarray]:
         """Engine-level batch search with tombstones masked out.  Returns
         (distances, rows) — use `query()` for string-id `Hit` results.
@@ -203,7 +204,8 @@ class Collection:
         if flt is not None:
             flt = validate_filter(self.schema, flt)
         return self._engine_search(np.asarray(vectors, np.float32), k,
-                                   flt=flt, ef=ef, rescore=rescore)
+                                   flt=flt, ef=ef, rescore=rescore,
+                                   expansion_width=expansion_width)
 
     def search_ids(self, vectors: np.ndarray, k: int, **kw
                    ) -> Tuple[np.ndarray, np.ndarray]:
@@ -227,7 +229,8 @@ class Collection:
             self._mask = np.asarray(self._live, dtype=bool)
         return self._mask
 
-    def _engine_search(self, queries, k, flt=None, ef=None, rescore=None):
+    def _engine_search(self, queries, k, flt=None, ef=None, rescore=None,
+                       expansion_width=None):
         with self._lock:
             if len(self._row_of) == 0:
                 # empty collection = empty result, not an error: pad with
@@ -240,7 +243,8 @@ class Collection:
             k = min(k, len(self._row_of))
             return self._engine.search(queries, k, flt=flt, ef=ef,
                                        mask=self._live_mask(),
-                                       rescore=rescore)
+                                       rescore=rescore,
+                                       expansion_width=expansion_width)
 
     @property
     def batcher(self) -> RequestBatcher:
@@ -282,11 +286,13 @@ class Collection:
                             if include_vector else None)))
         return hits
 
-    def _run_query(self, vec, k, flt, ef, rescore, include_vector, timeout):
+    def _run_query(self, vec, k, flt, ef, rescore, expansion_width,
+                   include_vector, timeout):
         if vec.ndim == 2:                       # already a batch: direct path
             with self._lock:   # rows stay valid until translated to ids
-                d, rows = self._engine_search(vec, k, flt=flt, ef=ef,
-                                              rescore=rescore)
+                d, rows = self._engine_search(
+                    vec, k, flt=flt, ef=ef, rescore=rescore,
+                    expansion_width=expansion_width)
                 return [self._hits_for(d[i], rows[i], include_vector)
                         for i in range(len(vec))]
         # single query: coalesce through the serving batcher.  The future
@@ -294,7 +300,8 @@ class Collection:
         # rows before translation — detect via the epoch and retry.
         for _ in range(5):
             epoch = self._epoch
-            fut = self.batcher.submit(vec, k, flt=flt, ef=ef, rescore=rescore)
+            fut = self.batcher.submit(vec, k, flt=flt, ef=ef, rescore=rescore,
+                                      expansion_width=expansion_width)
             d, rows = fut.result(timeout=timeout)
             with self._lock:
                 if self._epoch == epoch:

@@ -77,6 +77,7 @@ class Query:
         self._k = 10
         self._flt: Optional[Filter] = None
         self._ef: Optional[int] = None
+        self._width: Optional[int] = None
         self._rescore: Optional[bool] = None
         self._include_vector = False
 
@@ -107,6 +108,16 @@ class Query:
         self._ef = int(ef)
         return self
 
+    def expansion_width(self, width: int) -> "Query":
+        """Wide-beam HNSW expansion width for this query: candidates popped
+        (and adjacency rows fused) per traversal iteration.  1 = classic
+        single-pop; higher widths cut sequential loop trips ~width×."""
+        if width < 1:
+            raise SchemaError(
+                f"expansion_width must be >= 1, got {width}")
+        self._width = int(width)
+        return self
+
     def rescore(self, on: bool = True) -> "Query":
         """Override the schema's exact-rescore setting for this query."""
         self._rescore = bool(on)
@@ -128,5 +139,5 @@ class Query:
         """Execute.  1-D input -> List[Hit]; 2-D input -> List[List[Hit]]."""
         return self._col._run_query(
             self._vec, self._k, flt=self._flt, ef=self._ef,
-            rescore=self._rescore, include_vector=self._include_vector,
-            timeout=timeout)
+            rescore=self._rescore, expansion_width=self._width,
+            include_vector=self._include_vector, timeout=timeout)

@@ -220,8 +220,9 @@ class Get(Request):
 class Search(Request):
     """Single (1-D `vector`) or batch (2-D `vector`) filtered search.
 
-    The filter rides as a `filter_to_dict` tree; `ef`/`rescore` override the
-    schema's search knobs per request, exactly like the fluent `Query`.
+    The filter rides as a `filter_to_dict` tree; `ef`/`rescore`/
+    `expansion_width` override the schema's search knobs per request,
+    exactly like the fluent `Query`.
     """
 
     collection: str
@@ -230,6 +231,7 @@ class Search(Request):
     filter: Optional[Dict[str, Any]] = None
     ef: Optional[int] = None
     rescore: Optional[bool] = None
+    expansion_width: Optional[int] = None
     include_vector: bool = False
     op = "search"
 

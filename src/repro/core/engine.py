@@ -30,6 +30,7 @@ import dataclasses
 import time
 from typing import Any, Dict, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -57,6 +58,9 @@ class EngineConfig:
     ivf: IVFConfig = dataclasses.field(default_factory=IVFConfig)
     builder: str = "incremental"         # "incremental" (faithful) | "bulk"
     ef_search: int = 64
+    # wide-beam candidates popped per HNSW iteration; None defers to
+    # hnsw.expansion_width (per-query override rides search())
+    expansion_width: Optional[int] = None
     rescore: bool = True                 # exact second pass for quantized search
     rescore_multiplier: int = 4          # first pass fetches k * multiplier
     filter_flat_threshold: float = 0.10  # MEVS: selectivity below which we
@@ -241,7 +245,7 @@ class QuantixarEngine:
             hnsw_cfg = dataclasses.replace(cfg.hnsw, metric=eff_metric)
             builder = bulk_build if cfg.builder == "bulk" else build
             self._packed = builder(eff, hnsw_cfg)
-            self._device_graph = to_device(self._packed)
+            self._device_graph = self._to_device_graph()
         elif cfg.index == "ivf":
             # IVF-PQ scans probed lists over reconstructions (the ADC
             # identity, as in the quantized-HNSW path).  BQ's ±1 sign vectors
@@ -261,6 +265,17 @@ class QuantixarEngine:
             self._packed = None
             self._device_graph = None
         self.index_builds += 1
+
+    def _to_device_graph(self):
+        """Ship the sealed graph to device.  Quantized engines additionally
+        ship the code matrix (PQ uint codes / packed BQ uint32 words) so
+        layer-0 traversal runs in code domain through the fused beam-gather
+        kernels; the float proxy vectors stay aboard for upper-layer
+        descent."""
+        codes = None
+        if self.config.quantization in ("pq", "bq") and self._codes is not None:
+            codes = self._codes[: self._packed.n]
+        return to_device(self._packed, codes=codes)
 
     def _effective_vectors(self) -> Tuple[np.ndarray, str]:
         """Vectors the graph traverses + the traversal metric (see module doc)."""
@@ -282,12 +297,16 @@ class QuantixarEngine:
                flt: Optional[Filter] = None,
                ef: Optional[int] = None,
                mask: Optional[np.ndarray] = None,
-               rescore: Optional[bool] = None) -> Tuple[np.ndarray, np.ndarray]:
+               rescore: Optional[bool] = None,
+               expansion_width: Optional[int] = None,
+               ) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k similarity search (Vector Query / MEVS).
 
         `mask` is an optional precomputed (N,) bool row mask (e.g. the API
         layer's tombstone liveness mask) AND-ed with the metadata filter.
         `rescore` overrides the config's exact-rescore setting per query.
+        `expansion_width` overrides the configured wide-beam width for HNSW
+        traversal (1 == classic single-pop).
 
         The sealed segment is searched through its index; a non-empty delta
         segment is exact-scanned in the same distance space and merged, so
@@ -325,7 +344,8 @@ class QuantixarEngine:
             if cfg.index == "ivf":
                 d, ids = self._ivf_pass(queries, fetch, mask)
             else:
-                d, ids = self._hnsw_pass(queries, fetch, ef, mask)
+                d, ids = self._hnsw_pass(queries, fetch, ef, mask,
+                                         expansion_width)
             if self.delta_rows:
                 dd, dids = self._delta_pass(queries, fetch, mask)
                 d, ids = merge_candidates(d, ids, dd, dids, fetch)
@@ -358,7 +378,6 @@ class QuantixarEngine:
             d = pq_mod.adc_distances(lut, jnp.asarray(self._codes))
             if mask_j is not None:
                 d = jnp.where(mask_j[None, :], d, jnp.inf)
-            import jax
             neg_top, idx = jax.lax.top_k(-d, min(k, d.shape[1]))
             return np.asarray(-neg_top), np.asarray(idx, dtype=np.int32)
         if cfg.quantization == "bq":
@@ -367,37 +386,67 @@ class QuantixarEngine:
             d = d.astype(jnp.float32)
             if mask_j is not None:
                 d = jnp.where(mask_j[None, :], d, jnp.inf)
-            import jax
             neg_top, idx = jax.lax.top_k(-d, min(k, d.shape[1]))
             return np.asarray(-neg_top), np.asarray(idx, dtype=np.int32)
         d, ids = flat_search(jnp.asarray(queries), jnp.asarray(self.vectors),
                              min(k, self._n), metric=cfg.metric, mask=mask_j)
         return np.asarray(d), np.asarray(ids)
 
-    def _hnsw_pass(self, queries, k, ef, mask):
-        """Beam-search the sealed graph only (delta rows merge separately)."""
+    def _hnsw_pass(self, queries, k, ef, mask, expansion_width=None):
+        """Wide-beam-search the sealed graph only (delta rows merge
+        separately).  Quantized engines traverse layer 0 in *code domain*:
+        PQ pops evaluate per-query ADC LUTs against the uint code matrix,
+        BQ pops XOR+popcount packed words — both through the fused
+        beam-gather kernel path (kernels/ops.py), never a float32
+        reconstruction gather."""
         cfg = self.config
         g, max_level, metric = self._device_graph
         n_sealed = self._packed.n
+        width = self.effective_expansion_width(expansion_width)
         ef_eff = max(ef, k)
         if mask is not None:
             ef_eff = min(max(ef_eff * 2, k * 4), n_sealed)
         q = queries
+        q_codes = None
         if metric == "dot" and cfg.quantization == "none":
             q = preprocess_vectors(queries, cfg.metric)
         elif cfg.quantization == "bq":
-            signs = np.asarray(bq_mod.unpack_bits(
-                self._bq.encode(jnp.asarray(queries)), cfg.bq.bits),
-                dtype=np.float32)
-            q = signs * 2.0 - 1.0
-        elif cfg.quantization == "pq" and cfg.metric == "cosine":
-            q = preprocess_vectors(queries, "cosine")
+            packed_q = self._bq.encode(jnp.asarray(queries))   # (Q, W) uint32
+            signs = np.asarray(bq_mod.unpack_bits(packed_q, cfg.bq.bits),
+                               dtype=np.float32)
+            q = signs * 2.0 - 1.0            # descent proxy (±1 sign vectors)
+            if g.codes is not None:
+                metric = "hamming"
+                q_codes = packed_q
+        elif cfg.quantization == "pq":
+            if cfg.metric == "cosine":
+                q = preprocess_vectors(queries, "cosine")
+            if g.codes is not None:
+                metric = "adc"
+                q_codes = pq_mod.build_adc_lut(
+                    jnp.asarray(queries), self._pq.codebooks,
+                    normalize_inputs=cfg.metric == "cosine")
         d, ids = hnsw_search(g, jnp.asarray(q), k=min(ef_eff, n_sealed),
                              ef=min(ef_eff, n_sealed), max_level=max_level,
-                             metric=metric)
-        d, ids = self._apply_mask(np.asarray(d), np.asarray(ids),
-                                  mask, n_sealed)
+                             metric=metric, expansion_width=width,
+                             q_codes=q_codes)
+        d, ids = np.asarray(d), np.asarray(ids)
+        if metric == "hamming":
+            # back to the -dot space the delta scan / merge uses:
+            # dot(±1) = bits - 2·hamming, so -dot = 2·hamming - bits (exact)
+            d = np.where(np.isfinite(d), 2.0 * d - float(cfg.bq.bits), d)
+        d, ids = self._apply_mask(d, ids, mask, n_sealed)
         return d[:, :k], ids[:, :k]
+
+    def effective_expansion_width(self, override: Optional[int] = None) -> int:
+        """Per-query override > EngineConfig.expansion_width > HNSWConfig."""
+        width = (override if override is not None
+                 else self.config.expansion_width
+                 if self.config.expansion_width is not None
+                 else self.config.hnsw.expansion_width)
+        if width < 1:
+            raise ValueError(f"expansion_width must be >= 1, got {width}")
+        return int(width)
 
     def _ivf_pass(self, queries, k, mask):
         """Probe the sealed IVF lists only (delta rows merge separately)."""
@@ -590,7 +639,7 @@ class QuantixarEngine:
                           "dot" if config.quantization == "bq" else config.metric)
             eng._packed = PackedHNSW.from_state_dict(
                 hnsw_state, dataclasses.replace(config.hnsw, metric=eff_metric))
-            eng._device_graph = to_device(eng._packed)
+            eng._device_graph = eng._to_device_graph()
             eng._dirty = False
         elif config.index == "flat" and eng._n:
             eng._dirty = False

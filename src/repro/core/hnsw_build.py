@@ -47,6 +47,15 @@ class HNSWConfig:
     seed: int = 0
     extend_candidates: bool = False
     keep_pruned: bool = True
+    # search-time default: candidates popped per wide-beam iteration
+    # (1 == classic single-pop traversal); per-query override rides the
+    # engine/API search path
+    expansion_width: int = 4
+
+    def __post_init__(self):
+        if self.expansion_width < 1:
+            raise ValueError(
+                f"expansion_width must be >= 1, got {self.expansion_width}")
 
     @property
     def m0(self) -> int:

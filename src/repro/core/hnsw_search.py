@@ -6,14 +6,38 @@ ops so the whole search jits, vmaps over query batches, and shards:
   greedy upper-layer descent   -> ``lax.while_loop`` over a gathered (M,)
                                   neighbour row + masked argmin
   candidate min-heap / results -> one fused (ef,) candidate buffer maintained
-                                  by ``lax.top_k`` over (ef + M0) merged rows
+                                  by ``lax.top_k`` over (ef + B·M0) merged rows
   visited hash-set             -> packed bitmask, ``ceil(N/32)`` uint32 words,
-                                  updated with a scatter-add of unique bits
-  per-neighbour distance calls -> one (M0, D) gather + one matvec per
-                                  expansion (MXU/VPU work, not scalar chasing)
+                                  per-word OR-updated in a static B-step
+                                  unrolled scatter sequence (each popped row's
+                                  bits land before the next row's membership
+                                  test, so neighbours shared across the block
+                                  are visited exactly once)
+  per-neighbour distance calls -> one fused (B·M0,) gather-distance block per
+                                  iteration (kernels/beam_gather.py)
 
-Every expansion touches exactly one candidate, so the loop trip count is
-bounded (``max_iters``), giving XLA a fully static program.
+**Wide-beam traversal**: each layer-0 iteration pops the top-``B`` unexpanded
+candidates (``expansion_width``, static), gathers their adjacency rows into
+one (B·M0,) id block, evaluates every distance in a single fused contraction,
+and merges into the ``ef`` buffer with one ``top_k``.  The while-loop trip
+count — the sequential bottleneck, since vmapped queries step the loop until
+the *slowest* query finishes — drops ~B×, while per-iteration arithmetic
+becomes one big MXU-friendly block instead of B small ones.  ``B=1``
+reproduces the classic single-pop traversal bit-for-bit.
+
+Distance evaluation is pluggable per graph payload (``metric``):
+
+  "l2" / "dot"  float traversal over ``g.vectors``        (beam_gather)
+  "adc"         PQ code-domain: per-query LUT over (N, m) uint codes
+                (beam_gather_adc) — ADC == squared-L2-to-reconstruction
+  "hamming"     BQ code-domain: packed XOR+popcount over (N, W) uint32
+                words (beam_gather_hamming) — monotone affine in -dot of
+                the ±1 sign vectors
+
+so quantized engines traverse in code domain; upper-layer descent (a handful
+of scalar steps) keeps using the float proxy vectors.  The loop trip count is
+bounded (``max_iters``), giving XLA a fully static program; ``with_iters``
+returns the per-query trip counter for benchmarks/observability.
 """
 
 from __future__ import annotations
@@ -25,10 +49,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .hnsw_build import PAD, PackedHNSW
+from ..kernels import ops
+from .hnsw_build import PAD, PackedHNSW, make_dist_fn, preprocess_vectors
 
 Array = jax.Array
 INF = jnp.inf
+
+DEFAULT_EXPANSION_WIDTH = 4
 
 
 class HNSWGraph(NamedTuple):
@@ -41,10 +68,17 @@ class HNSWGraph(NamedTuple):
     upper_adj: Array    # (U, L_top, M) int32 upper-slot ids, PAD = -1
     entry_global: Array  # () int32
     entry_upper: Array   # () int32
+    codes: Optional[Array] = None  # (N, m) PQ codes / (N, W) packed BQ words
 
 
-def to_device(packed: PackedHNSW) -> Tuple[HNSWGraph, int, str]:
-    """Returns (graph arrays, static max_level, static metric)."""
+def to_device(packed: PackedHNSW,
+              codes: Optional[np.ndarray] = None) -> Tuple[HNSWGraph, int, str]:
+    """Returns (graph arrays, static max_level, static metric).
+
+    ``codes`` optionally ships the quantized corpus (PQ uint codes or packed
+    BQ uint32 words) alongside the float proxy vectors, enabling the
+    code-domain traversal modes ("adc"/"hamming") of :func:`search`.
+    """
     g = HNSWGraph(
         vectors=jnp.asarray(packed.vectors, dtype=jnp.float32),
         adj0=jnp.asarray(packed.adj0),
@@ -52,6 +86,7 @@ def to_device(packed: PackedHNSW) -> Tuple[HNSWGraph, int, str]:
         upper_adj=jnp.asarray(packed.upper_adj),
         entry_global=jnp.asarray(packed.entry_global, dtype=jnp.int32),
         entry_upper=jnp.asarray(packed.entry_upper, dtype=jnp.int32),
+        codes=None if codes is None else jnp.asarray(codes),
     )
     metric = "l2" if packed.config.metric == "l2" else "dot"
     return g, int(packed.max_level), metric
@@ -93,15 +128,30 @@ def _descend(q: Array, g: HNSWGraph, layer: int, cur: Array,
     return slot
 
 
-def _beam_search_base(q: Array, g: HNSWGraph, ep_global: Array, ef: int,
-                      max_iters: int, metric: str,
-                      n_words: int) -> Tuple[Array, Array]:
-    """Fixed-ef beam search on layer 0. Returns (dists (ef,), ids (ef,))."""
+def _make_block_dist(g: HNSWGraph, q: Array, q_code: Optional[Array],
+                     metric: str):
+    """The per-query fused distance evaluator: (L,) safe ids -> (L,) f32."""
+    if metric == "adc":
+        return lambda ids: ops.beam_gather_adc(q_code, ids, g.codes)
+    if metric == "hamming":
+        return lambda ids: ops.beam_gather_hamming(
+            q_code, ids, g.codes).astype(jnp.float32)
+    return lambda ids: ops.beam_gather_distances(q, ids, g.vectors,
+                                                 mode=metric)
+
+
+def _beam_search_base(g: HNSWGraph, ep_global: Array, ef: int, width: int,
+                      max_iters: int, n_words: int,
+                      block_dist) -> Tuple[Array, Array, Array]:
+    """Fixed-ef wide-beam search on layer 0.
+
+    Returns (dists (ef,), ids (ef,), iterations ()).
+    """
     m0 = g.adj0.shape[1]
+    l = width * m0
 
     # init: buffer holds just the entry point
-    cand_d = jnp.full((ef,), INF).at[0].set(
-        _dist_rows(q, g.vectors[ep_global][None, :], metric)[0])
+    cand_d = jnp.full((ef,), INF).at[0].set(block_dist(ep_global[None])[0])
     cand_id = jnp.full((ef,), -1, dtype=jnp.int32).at[0].set(ep_global)
     expanded = jnp.zeros((ef,), dtype=bool)
     visited = jnp.zeros((n_words,), dtype=jnp.uint32).at[ep_global // 32].set(
@@ -114,94 +164,139 @@ def _beam_search_base(q: Array, g: HNSWGraph, ep_global: Array, ef: int,
 
     def body(state):
         cand_d, cand_id, expanded, visited, it = state
-        # pop nearest unexpanded candidate
+        # pop the top-B nearest unexpanded candidates in one shot
         masked = jnp.where(~expanded, cand_d, INF)
-        c = jnp.argmin(masked)
-        expanded = expanded.at[c].set(True)
-        node = cand_id[c]
+        neg_d, sel = jax.lax.top_k(-masked, width)
+        pop_ok = jnp.isfinite(neg_d)
+        # surplus sel slots (pop_ok False) are INF: either empty (-1 id,
+        # marking them expanded is moot) or already-expanded (idempotent)
+        expanded = expanded.at[sel].set(True)
+        nodes = jnp.where(pop_ok, cand_id[sel], PAD)        # (B,)
 
-        nbrs = g.adj0[node]                         # (M0,) global ids
-        valid = nbrs != PAD
+        adj_rows = g.adj0[jnp.maximum(nodes, 0)]            # (B, M0)
+        adj_rows = jnp.where(pop_ok[:, None], adj_rows, PAD)
+        # per-word OR-reduction of the visited bits, unrolled over the B
+        # popped rows (B is static and small): each row's bits land before
+        # the next row's membership test, so a neighbour shared by several
+        # popped candidates is fresh exactly once.  Within one row bits are
+        # unique (adjacency rows are duplicate-free — graph invariant,
+        # tested) and previously 0 by the fresh mask, so add == or.
+        fresh_rows = []
+        for b in range(width):                              # static unroll
+            nbrs_b = adj_rows[b]
+            valid_b = nbrs_b != PAD
+            safe_b = jnp.maximum(nbrs_b, 0)
+            word_b = safe_b // 32
+            bit_b = (safe_b % 32).astype(jnp.uint32)
+            seen_b = (visited[word_b] >> bit_b) & jnp.uint32(1)
+            fresh_b = valid_b & (seen_b == 0)
+            add_b = jnp.where(fresh_b, jnp.uint32(1) << bit_b, jnp.uint32(0))
+            visited = visited.at[word_b].add(add_b)
+            fresh_rows.append(fresh_b)
+        nbrs = adj_rows.reshape(l)
+        fresh = jnp.stack(fresh_rows).reshape(l)
         safe = jnp.maximum(nbrs, 0)
-        word = safe // 32
-        bit = (safe % 32).astype(jnp.uint32)
-        seen = (visited[word] >> bit) & jnp.uint32(1)
-        fresh = valid & (seen == 0)
-        # scatter-OR: bits are unique per (word,bit) among fresh neighbours
-        # (adjacency rows are duplicate-free — graph invariant, tested) and
-        # previously 0 (fresh-mask), so add == or.
-        add_val = jnp.where(fresh, jnp.uint32(1) << bit, jnp.uint32(0))
-        visited = visited.at[word].add(add_val)
 
-        rows = g.vectors[safe]                      # (M0, D)
-        d = jnp.where(fresh, _dist_rows(q, rows, metric), INF)
+        d = jnp.where(fresh, block_dist(safe), INF)         # (B·M0,) fused
         new_id = jnp.where(fresh, nbrs, -1)
 
         merged_d = jnp.concatenate([cand_d, d])
         merged_id = jnp.concatenate([cand_id, new_id])
         merged_exp = jnp.concatenate([expanded, ~fresh])  # stale -> never expand
 
-        neg_top, sel = jax.lax.top_k(-merged_d, ef)
-        return (-neg_top, merged_id[sel], merged_exp[sel], visited, it + 1)
+        neg_top, keep = jax.lax.top_k(-merged_d, ef)
+        return (-neg_top, merged_id[keep], merged_exp[keep], visited, it + 1)
 
     state = (cand_d, cand_id, expanded, visited, jnp.array(0, jnp.int32))
-    cand_d, cand_id, _, _, _ = jax.lax.while_loop(cond, body, state)
-    return cand_d, cand_id
+    cand_d, cand_id, _, _, iters = jax.lax.while_loop(cond, body, state)
+    return cand_d, cand_id, iters
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "ef", "max_iters", "max_level", "metric"))
+    static_argnames=("k", "ef", "max_iters", "max_level", "metric",
+                     "expansion_width", "with_iters"))
 def search(g: HNSWGraph, queries: Array, *, k: int, ef: int,
            max_level: int, metric: str = "dot",
-           max_iters: Optional[int] = None) -> Tuple[Array, Array]:
+           expansion_width: int = DEFAULT_EXPANSION_WIDTH,
+           max_iters: Optional[int] = None,
+           q_codes: Optional[Array] = None,
+           with_iters: bool = False):
     """Batched HNSW search.
 
     Args:
       g: device graph from :func:`to_device`.
       queries: (Q, D) — pre-normalize for cosine (to_device stores the corpus
-        normalized; use metric="dot").
+        normalized; use metric="dot").  For code-domain metrics this is the
+        float proxy used by the upper-layer descent (PQ: the normalized
+        query; BQ: the ±1 sign vector).
       k: neighbours to return (k <= ef).
-      ef: beam width.
+      ef: beam width (result-buffer size).
       max_level: static top layer of the graph.
-      metric: "dot" | "l2" (cosine == dot on normalized inputs).
-      max_iters: expansion budget; default 4*ef.
+      metric: "dot" | "l2" (cosine == dot on normalized inputs), or the
+        code-domain modes "adc" / "hamming" (require ``g.codes`` +
+        ``q_codes``).
+      expansion_width: candidates popped (and adjacency rows fused) per
+        layer-0 iteration; 1 == classic single-pop traversal.
+      max_iters: expansion-iteration budget; default 4*ef.
+      q_codes: per-query code-domain payload — (Q, m, k) ADC LUTs for
+        metric="adc", (Q, W) packed uint32 query codes for "hamming".
+      with_iters: additionally return the (Q,) int32 layer-0 loop-trip
+        counters (the benchmark/observability hook).
 
     Returns:
-      (distances (Q, k) ascending raw scores, ids (Q, k) int32; -1 = unfilled).
+      (distances (Q, k) ascending raw scores, ids (Q, k) int32; -1 = unfilled)
+      [, iterations (Q,) if with_iters].
     """
     if max_iters is None:
         max_iters = 4 * ef
     if k > ef:
         raise ValueError(f"k={k} > ef={ef}")
+    if metric in ("adc", "hamming") and (g.codes is None or q_codes is None):
+        raise ValueError(f"metric {metric!r} needs g.codes and q_codes")
+    # a beam can't pop more candidates than the buffer holds (tiny corpora)
+    width = max(1, min(int(expansion_width), ef))
+    descent_metric = {"adc": "l2", "hamming": "dot"}.get(metric, metric)
     n = g.vectors.shape[0]
     n_words = (n + 31) // 32
     queries = queries.astype(jnp.float32)
 
-    def one(q):
+    def one(q, qc):
         slot = g.entry_upper
         for layer in range(max_level, 0, -1):       # static unroll, tiny
-            slot = _descend(q, g, layer - 1, slot, metric)
+            slot = _descend(q, g, layer - 1, slot, descent_metric)
         ep = jnp.where(jnp.asarray(max_level > 0),
                        g.upper_ids[slot], g.entry_global)
-        d, ids = _beam_search_base(q, g, ep, ef, max_iters, metric, n_words)
-        return d[:k], ids[:k]
+        block_dist = _make_block_dist(g, q, qc, metric)
+        d, ids, iters = _beam_search_base(g, ep, ef, width, max_iters,
+                                          n_words, block_dist)
+        return d[:k], ids[:k], iters
 
-    return jax.vmap(one)(queries)
+    if q_codes is None:
+        d, ids, iters = jax.vmap(lambda q: one(q, None))(queries)
+    else:
+        d, ids, iters = jax.vmap(one)(queries, q_codes)
+    return (d, ids, iters) if with_iters else (d, ids)
 
 
 def search_numpy_reference(packed: PackedHNSW, queries: np.ndarray, k: int,
-                           ef: int) -> Tuple[np.ndarray, np.ndarray]:
-    """Host oracle mirroring the fixed-shape device algorithm (test parity)."""
-    from .hnsw_build import make_dist_fn, preprocess_vectors
-
+                           ef: int,
+                           expansion_width: int = DEFAULT_EXPANSION_WIDTH,
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host oracle mirroring the fixed-shape device algorithm (test parity),
+    width-aware: pops ``expansion_width`` candidates per iteration, expands
+    their neighbour rows as one first-occurrence-deduplicated block, and
+    merges with a single stable top-ef selection — the same visit order and
+    tie-breaking as the device wide-beam loop."""
     metric = packed.config.metric
     vecs = packed.vectors
     dist = make_dist_fn(vecs, metric)
     q_all = preprocess_vectors(queries, metric)
+    width = max(1, int(expansion_width))
     out_d = np.full((len(q_all), k), np.inf, dtype=np.float32)
     out_i = np.full((len(q_all), k), -1, dtype=np.int32)
 
+    width = min(width, ef)                     # mirror the device clamp
     for qi, q in enumerate(q_all):
         # descent
         slot = packed.entry_upper
@@ -220,7 +315,7 @@ def search_numpy_reference(packed: PackedHNSW, queries: np.ndarray, k: int,
                     break
         ep = int(packed.upper_ids[slot]) if packed.max_level > 0 \
             else packed.entry_global
-        # beam
+        # wide beam
         cand_d = np.full((ef,), np.inf, np.float32)
         cand_i = np.full((ef,), -1, np.int64)
         expanded = np.zeros((ef,), bool)
@@ -229,30 +324,41 @@ def search_numpy_reference(packed: PackedHNSW, queries: np.ndarray, k: int,
         visited = {ep}
         for _ in range(4 * ef):
             masked = np.where(~expanded, cand_d, np.inf)
-            c = int(np.argmin(masked))
-            if not np.isfinite(masked[c]):
+            pops = [int(c) for c in np.argsort(masked, kind="stable")[:width]
+                    if np.isfinite(masked[c])]
+            if not pops:
                 break
-            expanded[c] = True
-            nbrs = packed.adj0[cand_i[c]]
-            nbrs = [int(e) for e in nbrs if e != PAD and e not in visited]
-            if not nbrs:
+            block: list = []
+            for c in pops:
+                expanded[c] = True
+                nbrs = packed.adj0[cand_i[c]]
+                # sequential visited update == the device block's
+                # first-occurrence dedup in flattened row-major order
+                fresh = [int(e) for e in nbrs
+                         if e != PAD and e not in visited]
+                visited.update(fresh)
+                block.extend(fresh)
+            if not block:
                 continue
-            visited.update(nbrs)
-            ds = dist(q, np.asarray(nbrs, np.int64))
+            ds = dist(q, np.asarray(block, np.int64))
             md = np.concatenate([cand_d, ds])
-            mi = np.concatenate([cand_i, nbrs])
-            me = np.concatenate([expanded, np.zeros(len(nbrs), bool)])
-            sel = np.argsort(md, kind="stable")[:ef]
-            cand_d, cand_i, expanded = md[sel], mi[sel], me[sel]
+            mi = np.concatenate([cand_i, block])
+            me = np.concatenate([expanded, np.zeros(len(block), bool)])
+            keep = np.argsort(md, kind="stable")[:ef]
+            cand_d, cand_i, expanded = md[keep], mi[keep], me[keep]
         out_d[qi] = cand_d[:k]
         out_i[qi] = cand_i[:k]
     return out_d, out_i
 
 
 def recall_at_k(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
-    """Mean fraction of true k-NN recovered (ann-benchmarks style)."""
-    hits = 0
-    k = true_ids.shape[1]
-    for f, t in zip(found_ids, true_ids):
-        hits += len(set(int(x) for x in f[:k]) & set(int(x) for x in t))
-    return hits / (len(true_ids) * k)
+    """Mean fraction of true k-NN recovered (ann-benchmarks style).
+
+    Vectorized: true ids are unique per row, so counting, for each true id,
+    whether it appears among the first k found ids equals the per-row set
+    intersection size — no Python loop over Q."""
+    found = np.asarray(found_ids)
+    true = np.asarray(true_ids)
+    k = true.shape[1]
+    hits = (true[:, :, None] == found[:, None, :k]).any(axis=2).sum()
+    return float(hits) / (true.shape[0] * k)

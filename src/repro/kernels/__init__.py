@@ -2,8 +2,10 @@
 (l2/dot GEMM, PQ-ADC, packed Hamming) + the fused weight-resident sLSTM
 sequence kernel motivated by the §Perf roofline work."""
 
-from .ops import (dot_distances, hamming_distances, l2_distances,
-                  pq_adc_distances)
+from .ops import (beam_gather_adc, beam_gather_distances,
+                  beam_gather_hamming, dot_distances, hamming_distances,
+                  l2_distances, pq_adc_distances)
 
-__all__ = ["dot_distances", "hamming_distances", "l2_distances",
+__all__ = ["beam_gather_adc", "beam_gather_distances", "beam_gather_hamming",
+           "dot_distances", "hamming_distances", "l2_distances",
            "pq_adc_distances"]

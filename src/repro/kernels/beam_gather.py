@@ -1,0 +1,209 @@
+"""Fused gather-distance Pallas kernels for wide-beam HNSW traversal.
+
+The wide-beam search pops B candidates per iteration and evaluates all
+B·M0 neighbour distances in one shot.  The memory pattern is a *row gather*
+(neighbour ids are data-dependent) followed by a dense contraction — exactly
+the shape scalar-prefetch Pallas was built for:
+
+  * the (L,) id vector rides as a scalar-prefetch argument, available before
+    the kernel body runs;
+  * the corpus (vectors / PQ codes / packed BQ words) stays in HBM
+    (``memory_space=ANY``) — it never fits in VMEM and only L rows of it are
+    touched per call;
+  * each grid step issues TB row-DMAs into a VMEM scratch tile (one DMA
+    semaphore per row, started together so the copies overlap), waits, and
+    fuses the distance arithmetic on the landed tile — gather and distance
+    never round-trip through HBM.
+
+Three variants share the structure, differing only in the fused math:
+
+  ``beam_gather_kernel``          rows (TB, D) fp32   -> L2 / -dot   (VPU/MXU)
+  ``beam_gather_adc_kernel``      rows (TB, m) uint   -> LUT-sum ADC (MXU via
+                                  the one-hot contraction of pq_adc.py)
+  ``beam_gather_hamming_kernel``  rows (TB, W) uint32 -> XOR+popcount (VPU)
+
+so quantized engines traverse the graph in *code domain* — the (N, m) code
+matrix is the only corpus-sized buffer the search touches, not a float32
+reconstruction.
+
+Block shapes: TB defaults to 128 rows; ids are padded to a TB multiple with
+row 0 (a valid row — padded lanes are sliced off before returning).  VMEM per
+step: rows TB·D·4 = 64 KiB at D=128, q one row, out (1, TB) — far under
+budget, leaving the pipeline to double-buffer the next tile's DMAs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TB = 128
+DEFAULT_M_CHUNK = 8
+
+
+def _gather_rows(ids_ref, corpus_ref, rows, sems, tb: int):
+    """DMA the tb rows named by this grid step's id slice into VMEM scratch.
+
+    All copies start before any is awaited (per-row semaphores), so the
+    gathers overlap instead of serializing on HBM latency.
+    """
+    i = pl.program_id(0)
+
+    def start(t, carry):
+        row = ids_ref[i * tb + t]
+        pltpu.make_async_copy(corpus_ref.at[pl.ds(row, 1), :],
+                              rows.at[pl.ds(t, 1), :], sems.at[t]).start()
+        return carry
+
+    jax.lax.fori_loop(0, tb, start, 0)
+
+    def wait(t, carry):
+        row = ids_ref[i * tb + t]
+        pltpu.make_async_copy(corpus_ref.at[pl.ds(row, 1), :],
+                              rows.at[pl.ds(t, 1), :], sems.at[t]).wait()
+        return carry
+
+    jax.lax.fori_loop(0, tb, wait, 0)
+
+
+def _pad_ids(ids: jax.Array, tb: int):
+    """ids (L,) -> (ceil(L/tb)*tb,) int32, padded with row 0."""
+    l = ids.shape[0]
+    g = -(-l // tb)
+    return jnp.pad(ids.astype(jnp.int32), (0, g * tb - l)), g
+
+
+# ------------------------------------------------------------------ L2 / dot
+def _beam_kernel(ids_ref, q_ref, corpus_ref, o_ref, rows, sems, *,
+                 tb: int, mode: str):
+    _gather_rows(ids_ref, corpus_ref, rows, sems, tb)
+    q = q_ref[...].astype(jnp.float32)            # (1, D)
+    r = rows[...].astype(jnp.float32)             # (TB, D)
+    if mode == "l2":
+        # same float ops as the traversal historically used (diff-square-sum,
+        # not the norm expansion) — keeps width=1 bit-compatible
+        d = r - q
+        o_ref[...] = jnp.sum(d * d, axis=-1)[None, :]
+    else:  # dot
+        o_ref[...] = -jax.lax.dot_general(
+            q, r, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)   # (1, TB)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "tb", "interpret"))
+def beam_gather_kernel(q: jax.Array, ids: jax.Array, corpus: jax.Array, *,
+                       mode: str = "l2", tb: int = DEFAULT_TB,
+                       interpret: bool = False) -> jax.Array:
+    """q (D,) × ids (L,) × corpus (N, D) -> (L,) float32 distances."""
+    if mode not in ("l2", "dot"):
+        raise ValueError(f"mode {mode!r}")
+    l = ids.shape[0]
+    d = corpus.shape[1]
+    tb = min(tb, l)
+    ids_p, g = _pad_ids(ids, tb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((1, d), lambda i, ids: (0, 0)),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((1, tb), lambda i, ids: (0, i)),
+        scratch_shapes=[pltpu.VMEM((tb, d), jnp.float32),
+                        pltpu.SemaphoreType.DMA((tb,))],
+    )
+    out = pl.pallas_call(
+        functools.partial(_beam_kernel, tb=tb, mode=mode),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, g * tb), jnp.float32),
+        interpret=interpret,
+    )(ids_p, q.astype(jnp.float32)[None, :], corpus.astype(jnp.float32))
+    return out[0, :l]
+
+
+# ---------------------------------------------------------------------- ADC
+def _beam_adc_kernel(ids_ref, lut_ref, codes_ref, o_ref, rows, sems, *,
+                     tb: int, m_chunk: int):
+    _gather_rows(ids_ref, codes_ref, rows, sems, tb)
+    lut = lut_ref[...].astype(jnp.float32)        # (m, k)
+    codes = rows[...].astype(jnp.int32)           # (TB, m)
+    m, k = lut.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2)
+    acc = jnp.zeros((1, tb), dtype=jnp.float32)
+    for m0 in range(0, m, m_chunk):               # static python loop
+        mc = min(m_chunk, m - m0)
+        onehot = (codes[:, m0:m0 + mc, None] == iota).astype(jnp.float32)
+        lut_c = lut[m0:m0 + mc, :].reshape(1, mc * k)
+        # MXU contraction over (mc·k): (1, mc·k) @ (mc·k, TB)
+        acc += jax.lax.dot_general(
+            lut_c, onehot.reshape(tb, mc * k),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "m_chunk", "interpret"))
+def beam_gather_adc_kernel(lut: jax.Array, ids: jax.Array, codes: jax.Array,
+                           *, tb: int = DEFAULT_TB,
+                           m_chunk: int = DEFAULT_M_CHUNK,
+                           interpret: bool = False) -> jax.Array:
+    """lut (m, k) × ids (L,) × codes (N, m) uint -> (L,) float32 ADC."""
+    l = ids.shape[0]
+    m = codes.shape[1]
+    tb = min(tb, l)
+    ids_p, g = _pad_ids(ids, tb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g,),
+        in_specs=[pl.BlockSpec(lut.shape, lambda i, ids: (0, 0)),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((1, tb), lambda i, ids: (0, i)),
+        scratch_shapes=[pltpu.VMEM((tb, m), codes.dtype),
+                        pltpu.SemaphoreType.DMA((tb,))],
+    )
+    out = pl.pallas_call(
+        functools.partial(_beam_adc_kernel, tb=tb, m_chunk=m_chunk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, g * tb), jnp.float32),
+        interpret=interpret,
+    )(ids_p, lut.astype(jnp.float32), codes)
+    return out[0, :l]
+
+
+# ------------------------------------------------------------------ Hamming
+def _beam_hamming_kernel(ids_ref, q_ref, codes_ref, o_ref, rows, sems, *,
+                         tb: int):
+    _gather_rows(ids_ref, codes_ref, rows, sems, tb)
+    x = jnp.bitwise_xor(rows[...], q_ref[...])    # (TB, W)
+    pc = jax.lax.population_count(x).astype(jnp.int32)
+    o_ref[...] = jnp.sum(pc, axis=-1)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def beam_gather_hamming_kernel(q_code: jax.Array, ids: jax.Array,
+                               codes: jax.Array, *, tb: int = DEFAULT_TB,
+                               interpret: bool = False) -> jax.Array:
+    """q_code (W,) uint32 × ids (L,) × codes (N, W) uint32 -> (L,) int32."""
+    assert q_code.dtype == jnp.uint32 and codes.dtype == jnp.uint32
+    l = ids.shape[0]
+    w = codes.shape[1]
+    tb = min(tb, l)
+    ids_p, g = _pad_ids(ids, tb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((1, w), lambda i, ids: (0, 0)),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((1, tb), lambda i, ids: (0, i)),
+        scratch_shapes=[pltpu.VMEM((tb, w), jnp.uint32),
+                        pltpu.SemaphoreType.DMA((tb,))],
+    )
+    out = pl.pallas_call(
+        functools.partial(_beam_hamming_kernel, tb=tb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, g * tb), jnp.int32),
+        interpret=interpret,
+    )(ids_p, q_code[None, :], codes)
+    return out[0, :l]

@@ -16,6 +16,8 @@ from typing import Optional
 import jax
 
 from . import ref
+from .beam_gather import (beam_gather_adc_kernel, beam_gather_hamming_kernel,
+                          beam_gather_kernel)
 from .hamming import hamming_kernel
 from .l2 import l2_distance_kernel
 from .pq_adc import pq_adc_kernel
@@ -65,3 +67,38 @@ def hamming_distances(q_codes: Array, x_codes: Array, *,
     if _use_ref(force_ref):
         return ref.hamming_ref(q_codes, x_codes)
     return hamming_kernel(q_codes, x_codes, interpret=_interpret(), **tiles)
+
+
+# ------------------------------------------------- wide-beam gather-distance
+# Per-query fused (ids -> row gather -> distance) evaluators for the HNSW
+# wide-beam traversal (core/hnsw_search.py).  Called under vmap/while_loop;
+# same ref/kernel dispatch contract as the dense kernels above.
+
+def beam_gather_distances(q: Array, ids: Array, corpus: Array, *,
+                          mode: str = "l2",
+                          force_ref: Optional[bool] = None, **tiles) -> Array:
+    """q (D,) × ids (L,) × corpus (N, D) -> (L,) float32 (l2 | dot)."""
+    if _use_ref(force_ref):
+        if mode == "l2":
+            return ref.beam_gather_l2_ref(q, ids, corpus)
+        return ref.beam_gather_dot_ref(q, ids, corpus)
+    return beam_gather_kernel(q, ids, corpus, mode=mode,
+                              interpret=_interpret(), **tiles)
+
+
+def beam_gather_adc(lut: Array, ids: Array, codes: Array, *,
+                    force_ref: Optional[bool] = None, **tiles) -> Array:
+    """lut (m, k) × ids (L,) × codes (N, m) -> (L,) float32 ADC distances."""
+    if _use_ref(force_ref):
+        return ref.beam_gather_adc_ref(lut, ids, codes)
+    return beam_gather_adc_kernel(lut, ids, codes,
+                                  interpret=_interpret(), **tiles)
+
+
+def beam_gather_hamming(q_code: Array, ids: Array, codes: Array, *,
+                        force_ref: Optional[bool] = None, **tiles) -> Array:
+    """q_code (W,) × ids (L,) × codes (N, W) uint32 -> (L,) int32 Hamming."""
+    if _use_ref(force_ref):
+        return ref.beam_gather_hamming_ref(q_code, ids, codes)
+    return beam_gather_hamming_kernel(q_code, ids, codes,
+                                      interpret=_interpret(), **tiles)

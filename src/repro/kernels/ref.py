@@ -47,6 +47,43 @@ def hamming_ref(q_codes: Array, x_codes: Array) -> Array:
     return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
 
 
+def beam_gather_l2_ref(q: Array, ids: Array, corpus: Array) -> Array:
+    """Fused gather-distance: q (D,) × ids (L,) × corpus (N, D) -> (L,).
+
+    Row gather followed by squared L2, written as the *same* float ops the
+    in-loop traversal used historically (rows - q, square, sum) so the
+    wide-beam search at width=1 reproduces the single-pop path bit-for-bit.
+    """
+    rows = corpus[ids]                     # (L, D)
+    d = rows - q[None, :]
+    return jnp.sum(d * d, axis=-1)
+
+
+def beam_gather_dot_ref(q: Array, ids: Array, corpus: Array) -> Array:
+    """Fused gather-distance, negative inner product variant -> (L,)."""
+    return -(corpus[ids] @ q)
+
+
+def beam_gather_adc_ref(lut: Array, ids: Array, codes: Array) -> Array:
+    """Code-domain fused gather-ADC: lut (m, k) × ids (L,) × codes (N, m).
+
+    out[l] = sum_i lut[i, codes[ids[l], i]] — the per-query PQ traversal
+    distance, evaluated on uint codes instead of float32 reconstructions.
+    """
+    m = lut.shape[0]
+    rows = codes[ids].astype(jnp.int32)    # (L, m)
+    gathered = lut.astype(jnp.float32)[jnp.arange(m)[None, :], rows]
+    return jnp.sum(gathered, axis=-1)
+
+
+def beam_gather_hamming_ref(q_code: Array, ids: Array, codes: Array) -> Array:
+    """Code-domain fused gather-Hamming: q_code (W,) uint32 × ids (L,) ×
+    codes (N, W) uint32 -> (L,) int32 popcount distances."""
+    rows = codes[ids]                      # (L, W)
+    x = jnp.bitwise_xor(rows, q_code[None, :])
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
 def slstm_sequence_ref(gates_x: Array, r: Array, b: Array,
                        n_heads: int) -> Array:
     """Stabilised exp-gate sLSTM over a sequence (scan of the model cell).

@@ -25,20 +25,21 @@ import numpy as np
 
 from ..api import (BatcherConfig, Database, KeywordField, QuantixarClient,
                    VectorField)
-from ..core.hnsw_build import exact_knn
+from ..core.hnsw_build import HNSWConfig, exact_knn
 from ..data.synthetic import gaussian_mixture
 
 
 def build_database(n: int, dim: int, index: str, quant: str,
                    seed: int = 0, max_batch: int = 32,
-                   max_wait_ms: float = 2.0):
+                   max_wait_ms: float = 2.0, expansion_width: int = 4):
     """Returns (db, corpus) so callers score recall against exactly the
     vectors that were indexed."""
     db = Database()
     col = db.create_collection(
         name="corpus",
         vector=VectorField(dim=dim, index=index, quantization=quant,
-                           builder="bulk"),
+                           builder="bulk",
+                           hnsw=HNSWConfig(expansion_width=expansion_width)),
         fields=(KeywordField("shard"),),
         batcher=BatcherConfig(max_batch=max_batch, max_wait_ms=max_wait_ms))
     corpus = gaussian_mixture(n, dim, seed=seed)
@@ -58,7 +59,8 @@ def run_embedded_demo(args) -> int:
     print(f"[serve] building {args.index}+{args.quant} over {args.n} vectors")
     t0 = time.perf_counter()
     db, corpus = build_database(args.n, args.dim, args.index, args.quant,
-                                max_batch=args.max_batch)
+                                max_batch=args.max_batch,
+                                expansion_width=args.width)
     col = db["corpus"]
     col.query(gaussian_mixture(1, args.dim, seed=7)[0]).top_k(1).run()
     print(f"[serve] built in {time.perf_counter() - t0:.1f}s; "
@@ -93,7 +95,8 @@ def _start_server(args, port: int):
     from ..serving.service import QuantixarService, ServiceConfig
 
     db, corpus = build_database(args.n, args.dim, args.index, args.quant,
-                                max_batch=args.max_batch)
+                                max_batch=args.max_batch,
+                                expansion_width=args.width)
     # warm the index so the first client query doesn't pay the build
     db["corpus"].query(gaussian_mixture(1, args.dim, seed=7)[0]).top_k(1).run()
     service = QuantixarService(
@@ -186,6 +189,8 @@ def main() -> int:
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--width", type=int, default=4,
+                    help="wide-beam expansion width (HNSW serving default)")
     ap.add_argument("--serve", action="store_true",
                     help="run the HTTP server until interrupted")
     ap.add_argument("--smoke", action="store_true",

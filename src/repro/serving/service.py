@@ -200,6 +200,8 @@ class QuantixarService:
             query = query.ef(req.ef)
         if req.rescore is not None:
             query = query.rescore(req.rescore)
+        if req.expansion_width is not None:
+            query = query.expansion_width(req.expansion_width)
         if req.include_vector:
             query = query.include("vector")
         # 1-D requests coalesce through the collection's RequestBatcher

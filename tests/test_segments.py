@@ -267,9 +267,9 @@ class TestSearchValidation:
         seen = {}
         orig = eng._hnsw_pass
 
-        def spy(q, k, ef, mask):
+        def spy(q, k, ef, mask, expansion_width=None):
             seen["ef"] = ef
-            return orig(q, k, ef, mask)
+            return orig(q, k, ef, mask, expansion_width)
 
         monkeypatch.setattr(eng, "_hnsw_pass", spy)
         eng.search(queries, 5, ef=0)
