@@ -2,7 +2,8 @@
 
 PY ?= python
 
-.PHONY: test smoke serve-smoke serve bench bench-smoke bench-serve ci
+.PHONY: test smoke serve-smoke serve bench bench-smoke bench-serve \
+	bench-query bench-query-smoke ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -30,5 +31,17 @@ serve:
 
 bench-serve:
 	PYTHONPATH=src $(PY) benchmarks/bench_serve.py
+
+# single-stage vs coarse-to-fine plan sweep -> BENCH_query.json
+bench-query:
+	PYTHONPATH=src $(PY) benchmarks/bench_query.py \
+		--out BENCH_query.json --timestamp $$(date +%s)
+
+# CI-sized sweep: coarse-to-fine may never lose recall vs legacy rescore
+bench-query-smoke:
+	PYTHONPATH=src $(PY) benchmarks/bench_query.py \
+		--n 2000 --dim 32 --queries 16 --oversamples 2,4 \
+		--coarse-efs 32,64 --min-recall 0.5 \
+		--out BENCH_query.json --timestamp $$(date +%s)
 
 ci: test smoke serve-smoke

@@ -1,0 +1,156 @@
+"""Query-plan benchmark: single-stage vs coarse-to-fine retrieval sweep.
+
+Builds a quantized (default PQ) collection and compares the legacy
+engine-internal rescore path against explicit coarse-to-fine plans
+(`.stages(oversample=...)` + `.ef(...)`) over an oversample × coarse-ef
+grid, reporting QPS and recall@k as JSON:
+
+    PYTHONPATH=src python benchmarks/bench_query.py --n 20000 --dim 128 \
+        --quant pq --oversamples 2,4,8 --coarse-efs 32,64,128 \
+        --out BENCH_query.json --timestamp $(date +%s)
+
+`--min-recall` gates the run (CI smoke): the best coarse-to-fine recall
+must reach the floor AND the grid point matching the schema's
+rescore_multiplier must reach the legacy rescore path's recall — a
+quality ratchet so the plan layer can never silently lose what
+`rescore=True` delivered.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.api import Database, VectorField
+from repro.core.hnsw_build import exact_knn
+from repro.core.pq import PQConfig
+from repro.data.synthetic import gaussian_mixture
+
+REPEATS = 3          # best-of timing, first call pays compilation
+
+
+def _recall(batches, gt) -> float:
+    hits = sum(len({h.id for h in row} & {f"v-{j}" for j in t})
+               for row, t in zip(batches, gt))
+    return hits / (gt.shape[0] * gt.shape[1])
+
+
+def _timed(fn):
+    best, result = float("inf"), None
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
+def run_bench(args) -> Dict:
+    db = Database()
+    quant_cfg = {}
+    if args.quant == "pq":
+        m = max(4, args.dim // 8)
+        while args.dim % m:
+            m -= 1
+        quant_cfg["pq"] = PQConfig(m=m, k=64, iters=8)
+    col = db.create_collection(
+        name="bench",
+        vector=VectorField(dim=args.dim, index=args.index,
+                           quantization=args.quant, builder="bulk",
+                           **quant_cfg))
+    corpus = gaussian_mixture(args.n, args.dim, seed=0)
+    col.upsert([f"v-{i}" for i in range(args.n)], corpus)
+    queries = gaussian_mixture(args.queries, args.dim, seed=7)
+    gt = exact_knn(queries, corpus, args.k, metric="cosine")
+    col.query(queries[0]).top_k(1).run()        # build outside timing
+
+    def measure(query) -> Dict:
+        secs, batches = _timed(lambda: query.run())
+        return {"qps": round(args.queries / secs, 1),
+                "recall": round(_recall(batches, gt), 4)}
+
+    base = col.query(queries).top_k(args.k)
+    out: Dict = {
+        "bench": "query_plan",
+        "n": args.n, "dim": args.dim, "index": args.index,
+        "quant": args.quant, "k": args.k, "queries": args.queries,
+        "rescore_multiplier": col.schema.vector.rescore_multiplier,
+        "single_stage_raw": measure(base.rescore(False)),
+        "single_stage_rescore": measure(base.rescore(True)),
+        "grid": [],
+    }
+    for oversample in args.oversamples:
+        for ef in args.coarse_efs:
+            cell = measure(base.stages(oversample=oversample).ef(ef))
+            cell.update({"oversample": oversample, "coarse_ef": ef})
+            out["grid"].append(cell)
+    if args.timestamp is not None:
+        out["timestamp"] = args.timestamp
+    return out
+
+
+def gate(out: Dict, min_recall: Optional[float]) -> List[str]:
+    failures: List[str] = []
+    if min_recall is None:
+        return failures
+    best = max(c["recall"] for c in out["grid"])
+    if best < min_recall:
+        failures.append(f"best coarse-to-fine recall {best:.3f} "
+                        f"< floor {min_recall}")
+    matched = [c for c in out["grid"]
+               if c["oversample"] == out["rescore_multiplier"]]
+    baseline = out["single_stage_rescore"]["recall"]
+    if not matched:
+        # the ratchet is the point of the gate — a grid that skips the
+        # schema's multiplier must fail loudly, not pass vacuously
+        failures.append(
+            f"gate cannot run: no grid cell at "
+            f"oversample={out['rescore_multiplier']} (the schema's "
+            f"rescore_multiplier); add it to --oversamples")
+    elif max(c["recall"] for c in matched) < baseline:
+        failures.append(
+            f"coarse-to-fine at oversample={out['rescore_multiplier']} "
+            f"({max(c['recall'] for c in matched):.3f}) lost recall vs "
+            f"legacy rescore ({baseline:.3f})")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--index", default="hnsw", choices=["hnsw", "flat", "ivf"])
+    ap.add_argument("--quant", default="pq", choices=["none", "pq", "bq"])
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--oversamples", default="2,4,8",
+                    type=lambda s: [int(x) for x in s.split(",")])
+    ap.add_argument("--coarse-efs", default="32,64,128",
+                    type=lambda s: [int(x) for x in s.split(",")])
+    ap.add_argument("--out", default=None, help="write JSON here")
+    ap.add_argument("--timestamp", type=int, default=None,
+                    help="run timestamp (passed in at the CLI/make boundary)")
+    ap.add_argument("--min-recall", type=float, default=None,
+                    help="fail unless best grid recall reaches this AND the "
+                         "matched-oversample cell >= legacy rescore recall")
+    args = ap.parse_args()
+
+    out = run_bench(args)
+    failures = gate(out, args.min_recall)
+    out["gate_failures"] = failures
+    text = json.dumps(out, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(text + "\n")
+    for f in failures:
+        print(f"[bench-query] FAIL: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,8 +4,10 @@
 
 Covers: declarative schema (vector field + typed metadata), string-id
 upsert, fluent filtered queries, quantized collections with rescore,
-delete/tombstone + compact, Database save/load persistence, and client mode
-(the same fluent query over the embedded HTTP server via QuantixarClient).
+delete/tombstone + compact, Database save/load persistence, client mode
+(the same fluent query over the embedded HTTP server via QuantixarClient),
+and declarative query plans (coarse-to-fine `.stages()`, prefetch + RRF
+fusion, filtered `count()`, and `.explain()` introspection).
 """
 
 import os
@@ -18,7 +20,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np  # noqa: E402
 
 from repro.api import (BoolField, CollectionSchema, Database,  # noqa: E402
-                       KeywordField, NumericField, VectorField)
+                       KeywordField, NumericField, Predicate, VectorField)
 from repro.core import BQConfig, PQConfig, exact_knn  # noqa: E402
 from repro.data.synthetic import gaussian_mixture  # noqa: E402
 
@@ -132,6 +134,32 @@ def main():
                      if k.startswith("serving_")}
     print(f"server-side serving stats: {serving_stats}")
     server.shutdown(close_service=False)
+
+    # 7. Query plans: coarse-to-fine, fusion, explain -----------------------
+    # Every query compiles to a declarative QueryPlan; .stages() makes the
+    # quantized coarse-to-fine retrieval explicit (code-domain first pass
+    # fetching oversample*k, exact float rescore down to k) and .explain()
+    # shows the per-stage candidate counts and timings.
+    pq_items = db["items-pq"]
+    ex = pq_items.query(queries[0]).top_k(K).stages(oversample=4).explain()
+    print("coarse-to-fine explain:")
+    for s in ex.stages:
+        print(f"  {s['stage']:<8} k={s['k']:<4} in={s['candidates_in']:<4} "
+              f"out={s['candidates_out']:<4} {s['seconds'] * 1e3:7.2f} ms")
+    # prefetch + fusion: independent sub-queries merged by reciprocal rank
+    fused = (items.query(queries[0]).top_k(5)
+             .prefetch(category="cat-1")
+             .prefetch(category="cat-2")
+             .fuse("rrf")
+             .run())
+    print(f"prefetch+rrf across cat-1/cat-2: "
+          f"{[(h.id, h.payload['category']) for h in fused]}")
+    # filtered cardinality without fetching hits, and example-based queries
+    n_cat3 = items.count(Predicate("category", "eq", "cat-3"))
+    rec = items.recommend(positives=["item-5", "item-10"],
+                          negatives=["item-99"]).top_k(3).run()
+    print(f"count(category==cat-3)={n_cat3}; "
+          f"recommend from examples -> {[h.id for h in rec]}")
     db.close()
 
 

@@ -1,14 +1,17 @@
-"""Retrieval-augmented serving: an LM backbone embeds documents, Quantixar
-collections index them, and batched queries retrieve + decode.
+"""Retrieval-augmented serving: an LM backbone embeds documents, a Quantixar
+collection indexes them, and declarative prefetch+RRF query plans retrieve
+before decode.
 
     PYTHONPATH=src python examples/rag_serve.py
 
 This is the combined-system story (DESIGN.md §5): the vector database is the
 retrieval layer for any assigned architecture; here the reduced qwen2 family
-config is the embedder AND the generator.  Documents live in per-shard
-`Collection`s of one `Database` under stable string ids ("doc-<i>"), with
-the request batcher and straggler-tolerant shard fan-out from repro.serving
-in the loop — the fan-out merges string-id results directly.
+config is the embedder AND the generator.  Documents live in ONE collection
+under stable string ids ("doc-<i>") with a `shard` keyword payload; each
+retrieval is a single declarative plan — one prefetch sub-query per shard,
+fused with reciprocal-rank fusion — so the fan-out/merge that used to be
+hand-rolled (`QuorumFanout`) is now an inspectable `QueryPlan` the server
+could execute over the wire unchanged.
 """
 
 import os
@@ -21,12 +24,11 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.api import Database, VectorField  # noqa: E402
+from repro.api import Database, KeywordField, VectorField  # noqa: E402
 from repro.configs import get_smoke_config  # noqa: E402
 from repro.data.synthetic import zipf_tokens  # noqa: E402
 from repro.models import init_train_state, make_serve_step  # noqa: E402
 from repro.models.model import forward, init_decode_state  # noqa: E402
-from repro.serving.batcher import QuorumFanout, RequestBatcher  # noqa: E402
 
 N_DOCS, DOC_LEN, N_SHARDS = 512, 24, 4
 
@@ -49,22 +51,23 @@ def main():
     emb = np.asarray(embed(jnp.asarray(docs)), dtype=np.float32)
     dim = emb.shape[1]
 
-    # 2. shard the corpus across N_SHARDS collections (one Database); ids are
-    #    globally stable strings, so no row-offset bookkeeping is needed
+    # 2. one collection, shard-tagged payloads: the shard layout that used
+    #    to be N separate collections is now a keyword field a query plan
+    #    can address per-prefetch
     db = Database()
-    per = N_DOCS // N_SHARDS
-    shard_fns = []
-    for s in range(N_SHARDS):
-        col = db.create_collection(name=f"docs-{s}",
-                                   vector=VectorField(dim=dim, index="flat"))
-        lo = s * per
-        col.upsert([f"doc-{i}" for i in range(lo, lo + per)],
-                   emb[lo: lo + per])
-        shard_fns.append(col.search_ids)
+    col = db.create_collection(
+        name="docs", vector=VectorField(dim=dim, index="flat"),
+        fields=(KeywordField("shard"),))
+    col.upsert([f"doc-{i}" for i in range(N_DOCS)], emb,
+               [{"shard": f"s{i % N_SHARDS}"} for i in range(N_DOCS)])
 
-    fanout = QuorumFanout(shard_fns, deadline_ms=2000,
-                          min_quorum=N_SHARDS - 1)
-    batcher = RequestBatcher(lambda q, k: fanout.search(q, k), max_batch=16)
+    def retrieval_query(q_vec, k=3):
+        """One declarative plan: a prefetch sub-query per shard, fused with
+        reciprocal-rank fusion (RRF) into a single top-k."""
+        q = col.query(q_vec).top_k(k)
+        for s in range(N_SHARDS):
+            q = q.prefetch(shard=f"s{s}")
+        return q.fuse("rrf")
 
     # 3. retrieval-augmented decode: retrieve nearest doc, prepend, generate
     serve = jax.jit(make_serve_step(cfg))
@@ -72,14 +75,14 @@ def main():
     q_emb = np.asarray(embed(jnp.asarray(queries)), dtype=np.float32)
 
     t0 = time.perf_counter()
-    futs = [batcher.submit(q, 3) for q in q_emb]
-    retrieved = [f.result(timeout=30) for f in futs]
+    retrieved = [retrieval_query(q).run() for q in q_emb]
     print(f"retrieved top-3 docs for 8 queries in "
           f"{time.perf_counter() - t0:.2f}s "
-          f"({fanout.last_responders}/{N_SHARDS} shards answered)")
+          f"(prefetch x{N_SHARDS} shards, RRF-fused)")
+    print(f"retrieval plan: {retrieval_query(q_emb[0]).explain()}")
 
     # prefill query + best doc, then greedy-decode 8 tokens
-    best = np.array([int(ids[0].split("-")[1]) for _, ids in retrieved])
+    best = np.array([int(hits[0].id.split("-")[1]) for hits in retrieved])
     ctx = np.concatenate([docs[best], queries], axis=1)  # (8, 2*DOC_LEN)
     dstate = init_decode_state(cfg, 8, ctx.shape[1] + 16)
     tok = jnp.asarray(ctx[:, :1])
@@ -93,7 +96,6 @@ def main():
     print("generated continuations (token ids):")
     for i, row in enumerate(np.stack(gen, axis=1)):
         print(f"  q{i}: doc={int(best[i])} -> {row.tolist()}")
-    batcher.close()
     db.close()
 
 

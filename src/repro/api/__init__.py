@@ -21,6 +21,12 @@ Over the wire (same surface, against `repro.serving.http`):
     col = client.collection("docs")
     hits = col.query(q).filter(lang="en").top_k(5).run()
 
+Every search compiles to a declarative, wire-serializable `QueryPlan`
+(`repro.api.plan`): single ANN passes, coarse-to-fine
+`.stages(coarse_k=...)` plans, `.prefetch(...)`/`.fuse("rrf")` hybrid
+queries, and `.explain()` introspection all run through the one staged
+executor — embedded or remote.
+
 The engine (`repro.core.engine.QuantixarEngine`) stays the internal
 per-collection backend; this layer adds named collections, declarative typed
 schemas, stable string ids with upsert/delete/compact semantics, a fluent
@@ -33,6 +39,8 @@ from .client import QuantixarClient, RemoteCollection
 from .collection import (Collection, CollectionClosed, Entity,
                          QueryRetriesExhausted)
 from .database import Database
+from .plan import (AnnStage, FusionStage, PlanExplain, PrefetchStage,
+                   QueryPlan, RescoreStage, plan_from_dict, plan_to_dict)
 from .query import Hit, Query
 from .requests import (ApiError, ErrorInfo, RemoteInvalidArgument,
                        RemoteNotFound, RemoteSchemaError, RemoteUnavailable)
@@ -43,6 +51,8 @@ __all__ = [
     "And", "Filter", "Not", "Or", "Predicate",
     "Collection", "CollectionClosed", "Entity", "Database", "Hit", "Query",
     "QueryRetriesExhausted",
+    "AnnStage", "FusionStage", "PlanExplain", "PrefetchStage", "QueryPlan",
+    "RescoreStage", "plan_from_dict", "plan_to_dict",
     "QuantixarClient", "RemoteCollection",
     "ApiError", "ErrorInfo", "RemoteInvalidArgument", "RemoteNotFound",
     "RemoteSchemaError", "RemoteUnavailable",

@@ -5,9 +5,11 @@ The client's surface is deliberately isomorphic to the embedded API —
 on the client, `upsert` / `get` / `delete` / `query` / `compact` / `stats`
 on `RemoteCollection` — so the same test scenarios run against either.
 `RemoteCollection.query()` even reuses the embedded fluent `Query` builder:
-validation (dims, filter ops, top_k) happens client-side against the cached
-schema, and only `_run_query` differs (a `Search` request over HTTP instead
-of an engine call).
+validation (dims, filter ops, top_k, plan structure) happens client-side
+against the cached schema, and only `execute_plan` differs — the compiled
+`QueryPlan` ships as a `Search` request over HTTP instead of running
+against a local engine, so multi-stage/fused/explain queries behave
+identically on both sides.
 
 Server failures arrive as structured `ErrorInfo` and are raised as
 `ApiError` subclasses that keep exception parity with the embedded layer
@@ -32,6 +34,8 @@ import numpy as np
 from ..core.metadata import Filter
 from . import requests as rq
 from .collection import Entity
+from .plan import (PlanExplain, QueryPlan, plan_to_dict, recommend_vector,
+                   validate_filter, validate_plan)
 from .query import Hit, Query
 from .schema import (BatcherConfig, CollectionSchema, MetadataField,
                      SchemaError, VectorField)
@@ -245,6 +249,21 @@ class RemoteCollection:
         """The embedded fluent builder, executed over the wire."""
         return Query(self, vector)
 
+    def recommend(self, positives: Sequence[Any],
+                  negatives: Sequence[Any] = ()) -> Query:
+        """Fluent query from example entities (ids resolved over the wire,
+        raw vectors used as-is): mean(positives) - mean(negatives)."""
+        return Query(self, recommend_vector(self, positives, negatives))
+
+    def count(self, flt: Optional[Filter] = None) -> int:
+        """Filtered cardinality without fetching hits (wire `Count` op)."""
+        body: Dict[str, Any] = {}
+        if flt is not None:
+            flt = validate_filter(self.schema, flt)
+            body["filter"] = rq.filter_to_dict(flt)
+        return int(self._client._call("POST", self._path("/count"),
+                                      body)["count"])
+
     def stats(self) -> Dict[str, Any]:
         return self._client._call("GET", self._path("/stats"))["stats"]
 
@@ -258,26 +277,29 @@ class RemoteCollection:
         """Parity no-op: server owns the collection's resources."""
 
     # ------------------------------------------------------------- internals
-    def _run_query(self, vec: np.ndarray, k: int, flt: Optional[Filter],
-                   ef: Optional[int], rescore: Optional[bool],
-                   expansion_width: Optional[int],
-                   include_vector: bool, timeout: float):
-        """`Query.run` backend: one `Search` request (single or batch)."""
-        body: Dict[str, Any] = {"vector": vec.tolist(), "k": k}
-        if flt is not None:
-            body["filter"] = rq.filter_to_dict(flt)
-        if ef is not None:
-            body["ef"] = ef
-        if rescore is not None:
-            body["rescore"] = rescore
-        if expansion_width is not None:
-            body["expansion_width"] = expansion_width
+    def execute_plan(self, plan: QueryPlan, *, include_vector: bool = False,
+                     timeout: float = 120.0, explain: bool = False):
+        """`Query.run`/`Query.explain` backend: ship the compiled plan as
+        one `Search` request (the wire twin of `Collection.execute_plan`)."""
+        # client-side validation keeps error parity with the embedded API
+        # (bad dims / unknown fields fail before any bytes hit the wire)
+        plan = validate_plan(self.schema, plan)
+        body: Dict[str, Any] = {"plan": plan_to_dict(plan)}
         if include_vector:
             body["include_vector"] = True
+        if explain:
+            body["explain"] = True
         # honor Query.run(timeout=...) like the embedded Future.result does
         result = self._client._call("POST", self._path("/search"), body,
                                     timeout=timeout)
-        hits = result["hits"]
-        if vec.ndim == 1:
-            return [_hit_from_dict(h) for h in hits]
-        return [[_hit_from_dict(h) for h in row] for row in hits]
+        raw = result["hits"]
+        if plan.batched:
+            hits = [[_hit_from_dict(h) for h in row] for row in raw]
+        else:
+            hits = [_hit_from_dict(h) for h in raw]
+        if explain:
+            echo = result.get("explain") or {}
+            return PlanExplain(plan=echo.get("plan") or {},
+                               stages=list(echo.get("stages") or ()),
+                               hits=hits)
+        return hits

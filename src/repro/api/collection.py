@@ -11,22 +11,31 @@ collection owns the mapping to stable string ids with `upsert`/`get`/
   * `compact()` rebuilds the engine from live rows only, reclaiming the
     space and graph quality lost to tombstones.
 
-Queries route through a per-collection `RequestBatcher` (serving layer), so
-concurrent single-vector queries coalesce into padded engine batches.
+Every read goes through ONE execution path: the fluent `Query` (and the
+legacy `search`/`search_ids` array API) compiles to a declarative
+`QueryPlan` which `execute_plan` runs — trivial single-vector plans
+coalesce through the per-collection `RequestBatcher` into padded engine
+batches, everything else (2-D batches, multi-stage coarse-to-fine plans,
+prefetch + fusion, `explain`) executes under the collection lock via the
+staged `PlanExecutor`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from ..core.engine import QuantixarEngine
+from ..core.executor import AnnParams, ExecResult, PlanExecutor
 from ..core.metadata import Filter
 from ..serving.batcher import RequestBatcher
-from .query import Hit, Query, validate_filter
+from .plan import (AnnStage, PlanExplain, QueryPlan, plan_to_dict,
+                   recommend_vector, validate_filter, validate_plan)
+from .query import Hit, Query
 from .schema import BatcherConfig, CollectionSchema, SchemaError
 
 
@@ -190,6 +199,31 @@ class Collection:
         """Start a fluent query: `col.query(v).filter(...).top_k(5).run()`."""
         return Query(self, vector)
 
+    def recommend(self, positives: Sequence[Any],
+                  negatives: Sequence[Any] = ()) -> Query:
+        """Start a fluent query whose vector is synthesized from example
+        entities (ids or raw vectors): mean(positives) - mean(negatives)."""
+        return Query(self, recommend_vector(self, positives, negatives))
+
+    def count(self, flt: Optional[Filter] = None) -> int:
+        """Filtered cardinality: live entities matching `flt` (all live
+        entities when None) — no hits fetched, no vector work."""
+        if flt is not None:
+            flt = validate_filter(self.schema, flt)
+        with self._lock:
+            if self._closed:
+                raise CollectionClosed(
+                    f"collection {self.name!r} is closed")
+            if flt is None or len(self._row_of) == 0:
+                # empty collection: nothing matches — don't let the
+                # metadata store raise on columns it has never seen
+                return len(self._row_of)
+            mask = self._engine.metadata.evaluate(flt)
+            live = self._live_mask()
+            if live is not None:
+                mask = mask & live
+            return int(np.asarray(mask, dtype=bool).sum())
+
     def search(self, vectors: np.ndarray, k: int,
                flt: Optional[Filter] = None, ef: Optional[int] = None,
                rescore: Optional[bool] = None,
@@ -198,14 +232,22 @@ class Collection:
         """Engine-level batch search with tombstones masked out.  Returns
         (distances, rows) — use `query()` for string-id `Hit` results.
 
-        An empty collection answers with the engine's padding convention
-        (all-inf distances, row -1) instead of raising, so shard fan-outs
-        and the serving plane see "no results", not an error."""
+        Compiles to a trivial single-stage plan, so the array API runs the
+        same execution path as the fluent/wire queries.  An empty
+        collection answers with the engine's padding convention (all-inf
+        distances, row -1) instead of raising, so shard fan-outs and the
+        serving plane see "no results", not an error."""
         if flt is not None:
             flt = validate_filter(self.schema, flt)
-        return self._engine_search(np.asarray(vectors, np.float32), k,
-                                   flt=flt, ef=ef, rescore=rescore,
-                                   expansion_width=expansion_width)
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        plan = QueryPlan(k=k, vector=np.asarray(vectors, np.float32),
+                         stages=(AnnStage(k=k, ef=ef,
+                                          expansion_width=expansion_width,
+                                          filter=flt, rescore=rescore),))
+        with self._lock:
+            res = self._execute_direct(plan)
+        return res.distances, res.ids
 
     def search_ids(self, vectors: np.ndarray, k: int, **kw
                    ) -> Tuple[np.ndarray, np.ndarray]:
@@ -229,8 +271,11 @@ class Collection:
             self._mask = np.asarray(self._live, dtype=bool)
         return self._mask
 
-    def _engine_search(self, queries, k, flt=None, ef=None, rescore=None,
-                       expansion_width=None):
+    def _engine_search(self, queries, k, flt=None,
+                       params: Optional[AnnParams] = None):
+        """One masked first-pass engine search — the ANN primitive both the
+        serving batcher and the plan executor call.  Per-query knobs arrive
+        as a single `AnnParams` struct instead of parallel keyword lists."""
         with self._lock:
             if len(self._row_of) == 0:
                 # empty collection = empty result, not an error: pad with
@@ -241,10 +286,26 @@ class Collection:
                 return (np.full((n, k), np.inf, dtype=np.float32),
                         np.full((n, k), -1, dtype=np.int64))
             k = min(k, len(self._row_of))
-            return self._engine.search(queries, k, flt=flt, ef=ef,
+            return self._engine.search(queries, k, flt=flt,
                                        mask=self._live_mask(),
-                                       rescore=rescore,
-                                       expansion_width=expansion_width)
+                                       params=params)
+
+    def _execute_direct(self, plan: QueryPlan,
+                        deadline: Optional[float] = None) -> ExecResult:
+        """Run a plan through the staged executor (caller holds the lock)."""
+        if self._closed:
+            # parity with the batcher path: a dropped collection must
+            # refuse direct-path queries too, not serve its stale engine
+            raise CollectionClosed(f"collection {self.name!r} is closed")
+        if len(self._row_of) == 0:
+            n = len(np.asarray(plan.vector)) if plan.batched else 1
+            return ExecResult(
+                distances=np.full((n, plan.k), np.inf, dtype=np.float32),
+                ids=np.full((n, plan.k), -1, dtype=np.int64),
+                stages=[])
+        executor = PlanExecutor(self._engine_search, self._engine,
+                                mask=self._live_mask())
+        return executor.execute(plan, deadline=deadline)
 
     @property
     def batcher(self) -> RequestBatcher:
@@ -286,28 +347,55 @@ class Collection:
                             if include_vector else None)))
         return hits
 
-    def _run_query(self, vec, k, flt, ef, rescore, expansion_width,
-                   include_vector, timeout):
-        if vec.ndim == 2:                       # already a batch: direct path
-            with self._lock:   # rows stay valid until translated to ids
-                d, rows = self._engine_search(
-                    vec, k, flt=flt, ef=ef, rescore=rescore,
-                    expansion_width=expansion_width)
-                return [self._hits_for(d[i], rows[i], include_vector)
-                        for i in range(len(vec))]
-        # single query: coalesce through the serving batcher.  The future
-        # resolves outside the lock, so a concurrent compact() could renumber
-        # rows before translation — detect via the epoch and retry.
-        for _ in range(5):
-            epoch = self._epoch
-            fut = self.batcher.submit(vec, k, flt=flt, ef=ef, rescore=rescore,
-                                      expansion_width=expansion_width)
-            d, rows = fut.result(timeout=timeout)
-            with self._lock:
-                if self._epoch == epoch:
-                    return self._hits_for(d, rows, include_vector)
-        raise QueryRetriesExhausted(
-            f"collection {self.name!r} kept compacting during the query")
+    def execute_plan(self, plan: QueryPlan, *, include_vector: bool = False,
+                     timeout: float = 120.0, explain: bool = False
+                     ) -> Union[List[Hit], List[List[Hit]], PlanExplain]:
+        """THE read path: every query — fluent builder, wire `Search` op,
+        legacy array API — arrives here as a declarative plan.
+
+        Trivial single-vector plans (one plain ANN stage) coalesce through
+        the serving batcher; batches, multi-stage plans, and `explain`
+        execute directly via the staged `PlanExecutor` under the collection
+        lock.  `timeout` bounds queue-wait on the batcher path and is
+        enforced at stage boundaries on the direct path (an in-flight
+        stage itself is not interrupted).  With `explain=True` the result
+        is a `PlanExplain` carrying the compiled plan, per-stage candidate
+        counts/timings, and hits."""
+        plan = validate_plan(self.schema, plan)
+        if plan.trivial and not plan.batched and not explain:
+            # single query: coalesce through the serving batcher.  The
+            # future resolves outside the lock, so a concurrent compact()
+            # could renumber rows before translation — detect via the epoch
+            # and retry.
+            stage = plan.stages[0]
+            vec = np.asarray(plan.vector, dtype=np.float32)
+            params = AnnParams.or_none(ef=stage.ef,
+                                       expansion_width=stage.expansion_width,
+                                       rescore=stage.rescore)
+            for _ in range(5):
+                epoch = self._epoch
+                fut = self.batcher.submit(vec, plan.k, flt=stage.filter,
+                                          params=params)
+                d, rows = fut.result(timeout=timeout)
+                with self._lock:
+                    if self._epoch == epoch:
+                        return self._hits_for(d, rows, include_vector)
+            raise QueryRetriesExhausted(
+                f"collection {self.name!r} kept compacting during the query")
+        deadline = time.perf_counter() + timeout
+        with self._lock:   # rows stay valid until translated to ids
+            res = self._execute_direct(plan, deadline=deadline)
+            if plan.batched:
+                hits: Any = [self._hits_for(res.distances[i], res.ids[i],
+                                            include_vector)
+                             for i in range(len(res.ids))]
+            else:
+                hits = self._hits_for(res.distances[0], res.ids[0],
+                                      include_vector)
+        if explain:
+            return PlanExplain(plan=plan_to_dict(plan), stages=res.stages,
+                               hits=hits)
+        return hits
 
     def close(self) -> None:
         with self._batcher_init_lock:

@@ -5,6 +5,12 @@ single atomic checkpoint generation: every collection's engine state and
 id/tombstone maps become namespaced arrays, and the declarative schemas ride
 in the manifest's `extra` JSON — so `Database.load(path)` reconstructs the
 full typed API surface (schemas included) from disk alone.
+
+`Database` is the embedded twin of `QuantixarClient`: both hand out
+collections whose reads (fluent `Query`, `count`, `recommend`, explicit
+`QueryPlan`s) run the same declarative plan pipeline — the client ships the
+compiled plan over the wire, a `Database` collection executes it in
+process — so scenarios move between the two backends without rewrites.
 """
 
 from __future__ import annotations

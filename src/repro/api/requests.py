@@ -220,24 +220,47 @@ class Get(Request):
 class Search(Request):
     """Single (1-D `vector`) or batch (2-D `vector`) filtered search.
 
-    The filter rides as a `filter_to_dict` tree; `ef`/`rescore`/
-    `expansion_width` override the schema's search knobs per request,
-    exactly like the fluent `Query`.
+    Two forms:
+
+      * legacy fields — `vector`/`k`/`filter` plus the per-request knobs
+        (`ef`/`rescore`/`expansion_width`), which the server compiles to a
+        trivial single-stage plan;
+      * `plan` — a full `plan_to_dict` tree (coarse-to-fine stages,
+        prefetch sub-plans, fusion), the wire form of the fluent `Query`.
+        When `plan` is set it is the whole query; the legacy fields are
+        ignored and the root vector rides inside the plan.
+
+    `explain=True` asks the server to echo the compiled plan and per-stage
+    candidate counts/timings alongside the hits.
     """
 
     collection: str
-    vector: List[Any]
+    vector: Optional[List[Any]] = None
     k: int = 10
     filter: Optional[Dict[str, Any]] = None
     ef: Optional[int] = None
     rescore: Optional[bool] = None
     expansion_width: Optional[int] = None
     include_vector: bool = False
+    plan: Optional[Dict[str, Any]] = None
+    explain: bool = False
     op = "search"
 
     @property
     def batched(self) -> bool:
+        """Legacy-form (vector-field) batched-ness; plan-form requests get
+        it from the parsed `QueryPlan.batched` instead."""
         return bool(self.vector) and isinstance(self.vector[0], (list, tuple))
+
+
+@dataclasses.dataclass
+class Count(Request):
+    """Filtered cardinality: how many live entities match `filter`
+    (all of them when None) — no hits fetched, no vector work."""
+
+    collection: str
+    filter: Optional[Dict[str, Any]] = None
+    op = "count"
 
 
 @dataclasses.dataclass
@@ -276,8 +299,8 @@ class Health(Request):
 
 
 AnyRequest = Union[CreateCollection, DropCollection, ListCollections,
-                   DescribeCollection, Upsert, Delete, Get, Search, Compact,
-                   Stats, Snapshot, Restore, Health]
+                   DescribeCollection, Upsert, Delete, Get, Search, Count,
+                   Compact, Stats, Snapshot, Restore, Health]
 
 
 def decode_request(d: Dict[str, Any]) -> Request:
@@ -352,10 +375,18 @@ class GetResult(Response):
 @dataclasses.dataclass
 class SearchResult(Response):
     """`hits` is a list of hit dicts for single queries, a list of lists for
-    batch queries (`batched` disambiguates the empty case)."""
+    batch queries (`batched` disambiguates the empty case).  When the
+    request asked for `explain`, `explain` carries the compiled plan echo
+    plus the executor's per-stage report."""
 
     hits: List[Any]
     batched: bool = False
+    explain: Optional[Dict[str, Any]] = None
+
+
+@dataclasses.dataclass
+class CountResult(Response):
+    count: int = 0
 
 
 @dataclasses.dataclass

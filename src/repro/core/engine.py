@@ -37,6 +37,7 @@ import numpy as np
 from . import bq as bq_mod
 from . import pq as pq_mod
 from .distances import get_metric
+from .executor import AnnParams
 from .flat import flat_search
 from .hnsw_build import HNSWConfig, PackedHNSW, build, bulk_build, preprocess_vectors
 from .ivf import IVFConfig, IVFIndex
@@ -299,6 +300,7 @@ class QuantixarEngine:
                mask: Optional[np.ndarray] = None,
                rescore: Optional[bool] = None,
                expansion_width: Optional[int] = None,
+               params: Optional[AnnParams] = None,
                ) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k similarity search (Vector Query / MEVS).
 
@@ -306,7 +308,10 @@ class QuantixarEngine:
         layer's tombstone liveness mask) AND-ed with the metadata filter.
         `rescore` overrides the config's exact-rescore setting per query.
         `expansion_width` overrides the configured wide-beam width for HNSW
-        traversal (1 == classic single-pop).
+        traversal (1 == classic single-pop).  `params` carries the same
+        three knobs as one `AnnParams` struct — the form the API layer's
+        plan executor and serving batcher thread through — and is mutually
+        exclusive with the individual keywords.
 
         The sealed segment is searched through its index; a non-empty delta
         segment is exact-scanned in the same distance space and merged, so
@@ -315,6 +320,13 @@ class QuantixarEngine:
 
         Returns (distances (Q,k) in the engine metric, ids (Q,k); -1 = none).
         """
+        if params is not None:
+            if (ef, rescore, expansion_width) != (None, None, None):
+                raise ValueError(
+                    "pass ef/rescore/expansion_width either as keywords or "
+                    "inside params=AnnParams(...), not both")
+            ef, rescore = params.ef, params.rescore
+            expansion_width = params.expansion_width
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
         if self._dirty:
@@ -354,7 +366,7 @@ class QuantixarEngine:
                 d, ids = self._flat_pass(queries, fetch, mask)
 
         if do_rescore:
-            d, ids = self._rescore(queries, ids, k, mask=mask)
+            d, ids = self.exact_rescore(queries, ids, k, mask=mask)
         else:
             d, ids = d[:, :k], ids[:, :k]
         # contract: +inf slots (masked-out / padded) never expose a row id
@@ -547,11 +559,12 @@ class QuantixarEngine:
         self._delta_cache = (delta, delta.version, eff_dev, metric)
         return eff_dev, metric
 
-    def _rescore(self, queries, cand_ids, k, mask=None):
-        """Exact re-ranking of quantized first-pass candidates (paper's
-        optional precision knob).  The row mask must be re-applied here:
-        exact distances would otherwise resurrect masked-out candidates that
-        the first pass only demoted to +inf."""
+    def exact_rescore(self, queries, cand_ids, k, mask=None):
+        """Exact re-ranking of first-pass candidates in the engine metric
+        (paper's optional precision knob) — also the public backend of the
+        plan layer's explicit `rescore` stage.  The row mask must be
+        re-applied here: exact distances would otherwise resurrect
+        masked-out candidates that the first pass only demoted to +inf."""
         pair = get_metric(self.config.metric)
         raw = self.vectors
         safe = np.maximum(cand_ids, 0)

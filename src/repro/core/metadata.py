@@ -93,8 +93,12 @@ class MetadataStore:
                 if col[row] is not None}
 
     def evaluate(self, flt: Filter) -> np.ndarray:
-        """Predicate tree -> (N,) bool mask. Missing values never match."""
+        """Predicate tree -> (N,) bool mask. Missing values never match —
+        including a column no record has ever written: it is all-missing,
+        not an error (the schema layer has already vetted the name)."""
         if isinstance(flt, Predicate):
+            if flt.column not in self._columns:
+                return np.zeros((self._n,), dtype=bool)
             col = self.column(flt.column)
             present = col != np.array(None)
             mask = np.zeros((self._n,), dtype=bool)

@@ -11,7 +11,9 @@ Modes:
 
   * `--smoke` — CI smoke: start a server on an ephemeral port, drive it with
     concurrent `QuantixarClient` searches, assert recall, batcher
-    coalescing, and a clean shutdown; exit non-zero on any failure.
+    coalescing, query-plan parity (coarse-to-fine `.stages()` + `.explain()`
+    plan echo, prefetch+RRF fusion, filtered `count`) between embedded and
+    wire, and a clean shutdown; exit non-zero on any failure.
 """
 
 from __future__ import annotations
@@ -126,6 +128,51 @@ def run_server(args) -> int:
     return 0
 
 
+def _plan_smoke(server, col, queries, args):
+    """Embedded-vs-remote parity of the declarative plan surface: the same
+    coarse-to-fine / fused / count queries against the served Database and
+    the wire client must agree hit for hit, and `explain()` must echo the
+    compiled plan with per-stage counts and timings on both sides."""
+    failures = []
+    embedded = server.service.db["corpus"]
+    k = args.k
+
+    wire_ex = col.query(queries[0]).top_k(k).stages(oversample=4).explain()
+    emb_ex = embedded.query(queries[0]).top_k(k).stages(oversample=4) \
+        .explain()
+    if [h.id for h in wire_ex.hits] != [h.id for h in emb_ex.hits]:
+        failures.append("coarse-to-fine wire hits != embedded hits")
+    if wire_ex.plan != emb_ex.plan:
+        failures.append("explain() plan echo differs embedded vs wire")
+    for name, ex in (("wire", wire_ex), ("embedded", emb_ex)):
+        shape = [s["stage"] for s in ex.stages]
+        if shape != ["ann", "rescore"]:
+            failures.append(f"{name} explain stages {shape} != ann+rescore")
+        elif not all(s["candidates_out"] > 0 and s["seconds"] >= 0
+                     for s in ex.stages):
+            failures.append(f"{name} explain missing counts/timings")
+
+    fused, fused_emb = [], []
+    for backend, out in ((col, fused), (embedded, fused_emb)):
+        q = backend.query(queries[1]).top_k(k)
+        for s in range(4):
+            q = q.prefetch(shard=f"s{s}")
+        out.extend(q.fuse("rrf").run())
+    if [h.id for h in fused] != [h.id for h in fused_emb]:
+        failures.append("prefetch+RRF wire hits != embedded hits")
+    if len(fused) != k:
+        failures.append(f"fused query returned {len(fused)}/{k} hits")
+
+    wire_n, embedded_n = col.count(), embedded.count()
+    if wire_n != args.n or wire_n != embedded_n:
+        failures.append(f"count() mismatch: wire {wire_n} "
+                        f"embedded {embedded_n} n {args.n}")
+    print(f"[smoke] plan parity: explain={[s['stage'] for s in wire_ex.stages]}"
+          f" fused_k={len(fused)} count={wire_n} "
+          f"({'ok' if not failures else 'FAILED'})")
+    return failures
+
+
 def run_smoke(args) -> int:
     """Start server → N concurrent client queries → assert recall +
     coalescing + clean shutdown.  The CI serve-smoke job."""
@@ -169,6 +216,8 @@ def run_smoke(args) -> int:
         if batches >= served and served > 1:
             failures.append(
                 f"no coalescing: {batches} batches for {served} requests")
+
+    failures += _plan_smoke(server, col, queries, args)
 
     try:
         server.shutdown()

@@ -90,8 +90,9 @@ class RequestBatcher:
         self._thread.start()
 
     def submit(self, query: np.ndarray, k: int, **extras: Any) -> Future:
-        """Enqueue one query.  `extras` (e.g. flt=..., ef=...) are forwarded
-        to search_fn; requests are only co-batched when their extras match.
+        """Enqueue one query.  `extras` (e.g. flt=..., params=AnnParams(...))
+        are forwarded to search_fn; requests are only co-batched when their
+        extras match (dataclass reprs make equal knob structs coalesce).
 
         Raises RuntimeError once `close()` has been called — the worker loop
         is gone, so enqueueing would leave the future to dangle until the

@@ -22,6 +22,9 @@ Routes (all under /v1):
     POST   /v1/collections/{name}/points/delete {"ids": [...]}
     GET    /v1/collections/{name}/points/{id}
     POST   /v1/collections/{name}/search        {"vector", "k", "filter", ...}
+                                                or {"plan": {...}, "explain"}
+    POST   /v1/collections/{name}/count         {"filter": {...}}
+    GET    /v1/collections/{name}/count
     POST   /v1/collections/{name}/compact
     GET    /v1/collections/{name}/stats
     GET    /v1/stats
@@ -158,6 +161,13 @@ def _r_get(body, name, id_):
 @_route("POST", r"^/v1/collections/([^/]+)/search$")
 def _r_search(body, name):
     return _build(rq.Search, collection=name, **body)
+
+
+# POST carries an optional filter tree in the body; GET counts everything
+@_route("POST", r"^/v1/collections/([^/]+)/count$")
+@_route("GET", r"^/v1/collections/([^/]+)/count$")
+def _r_count(body, name):
+    return _build(rq.Count, collection=name, **body)
 
 
 @_route("POST", r"^/v1/collections/([^/]+)/compact$")

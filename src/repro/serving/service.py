@@ -29,6 +29,7 @@ import numpy as np
 from ..api import requests as rq
 from ..api.collection import CollectionClosed, QueryRetriesExhausted
 from ..api.database import Database
+from ..api.plan import plan_from_dict
 from ..api.query import Hit
 from ..api.schema import BatcherConfig, CollectionSchema, SchemaError
 from .batcher import BatcherClosed
@@ -191,27 +192,52 @@ class QuantixarService:
 
     def _search(self, req: rq.Search) -> rq.SearchResult:
         col = self._col(req.collection)
-        vector = np.asarray(req.vector, dtype=np.float32)
-        flt = rq.filter_from_dict(req.filter)
-        query = col.query(vector).top_k(req.k)
-        if flt is not None:
-            query = query.filter(flt)
-        if req.ef is not None:
-            query = query.ef(req.ef)
-        if req.rescore is not None:
-            query = query.rescore(req.rescore)
-        if req.expansion_width is not None:
-            query = query.expansion_width(req.expansion_width)
-        if req.include_vector:
-            query = query.include("vector")
-        # 1-D requests coalesce through the collection's RequestBatcher
-        # inside Query.run(); 2-D requests run as one padded engine batch
-        hits = query.run(timeout=self.config.query_timeout_s)
-        if vector.ndim == 1:
-            return rq.SearchResult(hits=[_hit_to_dict(h) for h in hits])
+        timeout = self.config.query_timeout_s
+        if req.plan is not None:
+            # full declarative plan: validate/execute through the one plan
+            # path (trivial plans still coalesce in the RequestBatcher)
+            plan = plan_from_dict(req.plan)
+            out = col.execute_plan(plan, include_vector=req.include_vector,
+                                   timeout=timeout, explain=req.explain)
+            batched = plan.batched
+        else:
+            if req.vector is None:
+                raise rq.error_to_exception(rq.ErrorInfo(
+                    rq.INVALID_ARGUMENT,
+                    "search needs either 'vector' or 'plan'"))
+            vector = np.asarray(req.vector, dtype=np.float32)
+            flt = rq.filter_from_dict(req.filter)
+            query = col.query(vector).top_k(req.k)
+            if flt is not None:
+                query = query.filter(flt)
+            if req.ef is not None:
+                query = query.ef(req.ef)
+            if req.rescore is not None:
+                query = query.rescore(req.rescore)
+            if req.expansion_width is not None:
+                query = query.expansion_width(req.expansion_width)
+            if req.include_vector:
+                query = query.include("vector")
+            # the fluent builder compiles to a trivial plan: 1-D requests
+            # coalesce through the RequestBatcher, 2-D run as one batch
+            out = (query.explain(timeout=timeout) if req.explain
+                   else query.run(timeout=timeout))
+            batched = vector.ndim == 2
+        explain = None
+        hits = out
+        if req.explain:
+            hits, explain = out.hits, out.to_dict()
+        if not batched:
+            return rq.SearchResult(hits=[_hit_to_dict(h) for h in hits],
+                                   explain=explain)
         return rq.SearchResult(
             hits=[[_hit_to_dict(h) for h in row] for row in hits],
-            batched=True)
+            batched=True, explain=explain)
+
+    def _count(self, req: rq.Count) -> rq.CountResult:
+        col = self._col(req.collection)
+        return rq.CountResult(
+            count=col.count(rq.filter_from_dict(req.filter)))
 
     def _compact(self, req: rq.Compact) -> rq.CompactResult:
         col = self._col(req.collection)
@@ -247,6 +273,7 @@ class QuantixarService:
         rq.Delete: _delete,
         rq.Get: _get,
         rq.Search: _search,
+        rq.Count: _count,
         rq.Compact: _compact,
         rq.Stats: _stats,
         rq.Snapshot: _snapshot,

@@ -307,3 +307,248 @@ class TestDatabase:
         CheckpointStore(str(tmp_path)).save({"x": np.zeros(3)})
         with pytest.raises(SchemaError):
             Database.load(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Query builder copy-on-write (PR 5 satellite regression)
+# ---------------------------------------------------------------------------
+
+class TestQueryCopyOnWrite:
+    def test_base_query_forks_cleanly(self, corpus, queries):
+        """Setters must return copies: reusing a base query between
+        variants used to silently accumulate filters in the base."""
+        col = _collection(corpus)
+        base = col.query(queries[0]).top_k(5)
+        v1 = base.filter(category="cat-1")
+        v2 = base.filter(category="cat-2")
+        assert v1 is not base and v2 is not base and v1 is not v2
+        assert all(h.payload["category"] == "cat-1" for h in v1.run())
+        assert all(h.payload["category"] == "cat-2" for h in v2.run())
+        # the base stayed unfiltered (this is the regression: it used to
+        # carry cat-1 AND cat-2 and match nothing)
+        hits = base.run()
+        assert len(hits) == 5
+        assert {h.payload["category"] for h in hits} != {"cat-1"}
+
+    def test_every_setter_is_copy_on_write(self, corpus, queries):
+        col = _collection(corpus)
+        base = col.query(queries[0])
+        for forked in (base.top_k(3), base.ef(32), base.expansion_width(2),
+                       base.rescore(False), base.include("vector"),
+                       base.where("price", "lt", 10),
+                       base.stages(coarse_k=12),
+                       base.prefetch(category="cat-1")):
+            assert forked is not base
+        # base state untouched by all of the above
+        assert base._k == 10 and base._flt is None and base._ef is None
+        assert base._prefetch == () and base._coarse_k is None
+        assert not base._include_vector
+
+
+# ---------------------------------------------------------------------------
+# Declarative plans, embedded: stages / fusion / recommend / count
+# ---------------------------------------------------------------------------
+
+class TestPlansEmbedded:
+    def test_stages_matches_engine_rescore_hit_for_hit(self, corpus,
+                                                       queries):
+        """Acceptance: the explicit coarse-to-fine plan (raw code-domain
+        first pass at oversample*k, exact rescore to k) must reproduce the
+        legacy engine-internal rescore=True path exactly at equal k."""
+        col = _collection(corpus, quantization="pq",
+                          pq=PQConfig(m=8, k=32, iters=6))
+        k = 10
+        for q in queries[:4]:
+            legacy = col.query(q).top_k(k).rescore(True).run()
+            staged = col.query(q).top_k(k).stages(coarse_k=4 * k).run()
+            assert [h.id for h in staged] == [h.id for h in legacy]
+            assert [h.score for h in staged] == pytest.approx(
+                [h.score for h in legacy])
+
+    def test_explain_stages_and_counts(self, corpus, queries):
+        col = _collection(corpus, quantization="pq",
+                          pq=PQConfig(m=8, k=32, iters=6))
+        ex = col.query(queries[0]).top_k(5).stages(coarse_k=20).explain()
+        assert [s["stage"] for s in ex.stages] == ["ann", "rescore"]
+        ann, rescore = ex.stages
+        assert ann["k"] == 20 and ann["candidates_out"] == 20
+        assert rescore["k"] == 5 and rescore["candidates_out"] == 5
+        assert rescore["candidates_in"] == 20
+        assert all(s["seconds"] >= 0 for s in ex.stages)
+        assert ex.plan["k"] == 5
+        assert [s["op"] for s in ex.plan["stages"]] == ["ann", "rescore"]
+        assert [h.id for h in ex.hits] == [
+            h.id for h in
+            col.query(queries[0]).top_k(5).stages(coarse_k=20).run()]
+
+    def test_fusion_validation_errors(self, corpus, queries):
+        col = _collection(corpus)
+        with pytest.raises(SchemaError):          # fuse without prefetch
+            col.query(queries[0]).fuse("rrf").run()
+        with pytest.raises(SchemaError):          # batch root + prefetch
+            col.query(queries[:2]).prefetch(category="cat-1").run()
+        with pytest.raises(SchemaError):          # unknown fusion method
+            col.query(queries[0]).prefetch(category="cat-1").fuse("max")
+        with pytest.raises(SchemaError):          # weights/plans mismatch
+            (col.query(queries[0]).prefetch(category="cat-1")
+             .fuse("linear", weights=[0.5, 0.5]).run())
+
+    def test_rrf_fusion_unions_filtered_lists(self, corpus, queries):
+        col = _collection(corpus)
+        fused = (col.query(queries[0]).top_k(8)
+                 .prefetch(category="cat-1")
+                 .prefetch(category="cat-2")
+                 .fuse("rrf")
+                 .run())
+        assert 0 < len(fused) <= 8
+        cats = {h.payload["category"] for h in fused}
+        assert cats <= {"cat-1", "cat-2"}
+        # top hit of each filtered sub-query must survive RRF
+        top1 = col.query(queries[0]).filter(category="cat-1").top_k(1).run()
+        top2 = col.query(queries[0]).filter(category="cat-2").top_k(1).run()
+        fused_ids = {h.id for h in fused}
+        assert top1[0].id in fused_ids and top2[0].id in fused_ids
+
+    def test_linear_fusion_respects_weights(self, corpus, queries):
+        col = _collection(corpus)
+        heavy1 = (col.query(queries[0]).top_k(1)
+                  .prefetch(category="cat-1").prefetch(category="cat-2")
+                  .fuse("linear", weights=[1.0, 0.0]).run())
+        top1 = col.query(queries[0]).filter(category="cat-1").top_k(1).run()
+        assert heavy1[0].id == top1[0].id
+
+    def test_recommend_synthesizes_mean_difference(self, corpus, queries):
+        col = _collection(corpus)
+        pos, neg = [corpus[3], corpus[4]], [corpus[100]]
+        expect = corpus[3:5].mean(axis=0) - corpus[100]
+        by_vec = col.recommend(pos, neg).top_k(5).run()
+        direct = col.query(expect).top_k(5).run()
+        assert [h.id for h in by_vec] == [h.id for h in direct]
+        # ids resolve to stored vectors
+        by_id = col.recommend(["item-3", "item-4"], ["item-100"]) \
+            .top_k(5).run()
+        assert [h.id for h in by_id] == [h.id for h in direct]
+        with pytest.raises(SchemaError):
+            col.recommend([])
+        with pytest.raises(SchemaError):
+            col.recommend(["never-stored"])
+
+    def test_count(self, corpus):
+        col = _collection(corpus)
+        assert col.count() == N
+        assert col.count(Predicate("category", "eq", "cat-1")) == N // 4
+        assert col.count(And((Predicate("category", "eq", "cat-1"),
+                              Predicate("price", "lt", 0)))) == 0
+        col.delete(["item-1", "item-5"])          # both cat-1
+        assert col.count() == N - 2
+        assert col.count(Predicate("category", "eq", "cat-1")) == N // 4 - 2
+        with pytest.raises(SchemaError):
+            col.count(Predicate("no_such_field", "eq", 1))
+
+    def test_empty_collection_plans(self, queries):
+        col = Database().create_collection(_schema())
+        assert col.query(queries[0]).stages(coarse_k=20).run() == []
+        ex = col.query(queries[0]).stages(coarse_k=20).explain()
+        assert ex.hits == [] and ex.stages == []
+        assert col.count() == 0
+        # filtered count on an empty collection is 0, not a KeyError from
+        # the metadata store's never-seen column
+        assert col.count(Predicate("category", "eq", "cat-1")) == 0
+
+    def test_direct_path_honors_timeout(self, corpus, queries):
+        """Multi-stage plans enforce run(timeout=...) at stage boundaries
+        instead of silently ignoring it on the direct execution path."""
+        col = _collection(corpus)
+        with pytest.raises(TimeoutError):
+            col.query(queries[0]).top_k(5).stages(coarse_k=20) \
+                .run(timeout=0.0)
+        # a sane deadline still completes
+        hits = col.query(queries[0]).top_k(5).stages(coarse_k=20) \
+            .run(timeout=30.0)
+        assert len(hits) == 5
+
+    def test_search_array_api_unchanged(self, corpus, queries):
+        """Legacy array-level search now compiles to a trivial plan but
+        must keep its (distances, rows) contract, ef=0 honoring included."""
+        col = _collection(corpus)
+        d, rows = col.search(queries, k=4)
+        assert d.shape == rows.shape == (len(queries), 4)
+        assert (rows >= 0).all()
+        with pytest.raises(ValueError):
+            col.search(queries, k=0)
+
+    def test_root_filter_is_an_invariant_over_prefetch(self, corpus,
+                                                       queries):
+        """A root .filter() must be ANDed into every prefetch sub-query,
+        not silently replaced by the sub-query's own filter."""
+        col = _collection(corpus)
+        fused = (col.query(queries[0]).top_k(8)
+                 .filter(in_stock=True)
+                 .prefetch(category="cat-1")
+                 .prefetch(category="cat-2")
+                 .fuse("rrf")
+                 .run())
+        assert fused, "expected in-stock hits"
+        for h in fused:
+            assert h.payload["in_stock"] is True
+            assert h.payload["category"] in ("cat-1", "cat-2")
+
+    def test_rescore_override_reaches_prefetch_subplans(self, corpus,
+                                                        queries):
+        """.rescore(False) (a latency knob) must not be silently ignored
+        when prefetch sub-queries are present."""
+        col = _collection(corpus, quantization="pq",
+                          pq=PQConfig(m=8, k=32, iters=6))
+        plan = (col.query(queries[0]).top_k(5).rescore(False)
+                .prefetch(category="cat-1")
+                .fuse("rrf")._compile())
+        sub = plan.stages[0].plans[0]
+        assert sub.stages[0].rescore is False
+
+    def test_fused_stages_oversample_widens_subquery_pools(self, corpus,
+                                                           queries):
+        """.stages(oversample=N) on a fused query must widen each prefetch
+        sub-query to the coarse pool (raw candidates, no engine-internal
+        rescore) and leave the one exact pass to the trailing rescore
+        stage — not fuse N*k out of k-sized lists."""
+        col = _collection(corpus, quantization="pq",
+                          pq=PQConfig(m=8, k=32, iters=6))
+        plan = (col.query(queries[0]).top_k(10).stages(oversample=8)
+                .prefetch(category="cat-1").prefetch(category="cat-2")
+                .fuse("rrf")._compile())
+        prefetch, fusion, rescore = plan.stages
+        assert fusion.k == 80 and rescore.k == 10
+        for sub in prefetch.plans:
+            assert sub.k == 80
+            assert sub.stages[0].k == 80
+            assert sub.stages[0].rescore is False
+        hits = (col.query(queries[0]).top_k(10).stages(oversample=8)
+                .prefetch(category="cat-1").prefetch(category="cat-2")
+                .fuse("rrf").run())
+        assert 0 < len(hits) <= 10
+
+    def test_filter_on_never_written_column_matches_nothing(self, corpus,
+                                                            queries):
+        """A schema-declared field no payload ever populated is all-missing
+        ('missing values never match'), not a KeyError/500."""
+        col = Database().create_collection(_schema())
+        col.upsert(_ids(20), corpus[:20])            # no payloads at all
+        assert col.count(Predicate("category", "eq", "x")) == 0
+        assert col.query(queries[0]) \
+            .filter(category="x").top_k(3).run() == []
+
+    def test_closed_collection_refuses_direct_path_queries(self, corpus,
+                                                           queries):
+        """close()/drop must refuse multi-stage, batched, count, and array
+        searches too — not just the batcher path."""
+        from repro.api import CollectionClosed
+        col = _collection(corpus)
+        col.close()
+        with pytest.raises(CollectionClosed):
+            col.query(queries[0]).stages(coarse_k=20).run()
+        with pytest.raises(CollectionClosed):
+            col.query(queries[:2]).top_k(3).run()     # batched
+        with pytest.raises(CollectionClosed):
+            col.count()
+        with pytest.raises(CollectionClosed):
+            col.search(queries, k=3)

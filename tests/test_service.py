@@ -456,3 +456,254 @@ class TestConcurrentStress:
             t.join(timeout=30)
         db.close()
         assert errors == []
+
+
+# ---------------------------------------------------------------- query plans
+class TestQueryPlans:
+    """PR 5 acceptance: coarse-to-fine plans, explain, fusion, count —
+    identical embedded and over the wire."""
+
+    def test_coarse_to_fine_ge_rescore_recall(self, backend, corpus,
+                                              queries):
+        """A coarse-to-fine plan on a PQ collection reaches >= the recall
+        of the legacy rescore=True path at equal k (in fact reproduces it
+        hit for hit at coarse_k == rescore_multiplier * k)."""
+        from repro.core import PQConfig
+        from repro.core.hnsw_build import exact_knn
+        col = _make(backend, corpus, quantization="pq",
+                    pq=PQConfig(m=8, k=32, iters=6))
+        k = 10
+        gt = exact_knn(queries, corpus, k, metric="cosine")
+
+        def recall(rows):
+            return sum(len({h.id for h in r} & {f"item-{j}" for j in t})
+                       for r, t in zip(rows, gt)) / (len(queries) * k)
+
+        legacy = [col.query(q).top_k(k).rescore(True).run()
+                  for q in queries]
+        staged = [col.query(q).top_k(k).stages(coarse_k=4 * k).run()
+                  for q in queries]
+        assert recall(staged) >= recall(legacy)
+        assert [[h.id for h in r] for r in staged] \
+            == [[h.id for h in r] for r in legacy]
+
+    def test_explain_both_sides(self, backend, corpus, queries):
+        col = _make(backend, corpus)
+        ex = col.query(queries[0]).top_k(5).stages(coarse_k=20).explain()
+        assert [s["stage"] for s in ex.stages] == ["ann", "rescore"]
+        assert ex.stages[0]["candidates_out"] == 20
+        assert ex.stages[1]["candidates_out"] == 5
+        assert all(s["seconds"] >= 0 for s in ex.stages)
+        assert [s["op"] for s in ex.plan["stages"]] == ["ann", "rescore"]
+        assert len(ex.hits) == 5
+
+    def test_prefetch_fusion(self, backend, corpus, queries):
+        col = _make(backend, corpus)
+        fused = (col.query(queries[0]).top_k(6)
+                 .prefetch(category="cat-1")
+                 .prefetch(category="cat-2")
+                 .fuse("rrf")
+                 .run())
+        assert 0 < len(fused) <= 6
+        assert {h.payload["category"] for h in fused} <= {"cat-1", "cat-2"}
+
+    def test_count(self, backend, corpus):
+        col = _make(backend, corpus)
+        assert col.count() == N
+        assert col.count(Predicate("category", "eq", "cat-2")) == N // 4
+        col.delete(["item-2"])                    # a cat-2 item
+        assert col.count(Predicate("category", "eq", "cat-2")) == N // 4 - 1
+
+
+class TestPlanWireParity:
+    """Wire and embedded execution of the SAME multi-stage plan must agree
+    on hits, scores, and the explain() echo."""
+
+    def _pair(self, client, corpus, **vector_kw):
+        remote = _make(client, corpus, **vector_kw)
+        db = Database()
+        embedded = _make(db, corpus, **vector_kw)
+        return remote, embedded, db
+
+    def test_multi_stage_and_fused_hit_for_hit(self, client, corpus,
+                                               queries):
+        remote, embedded, db = self._pair(client, corpus, index="hnsw")
+        builders = [
+            lambda c, q: c.query(q).top_k(6).stages(coarse_k=24).ef(64),
+            lambda c, q: (c.query(q).top_k(6)
+                          .prefetch(category="cat-1")
+                          .prefetch(vector=q, category="cat-2")
+                          .fuse("rrf")),
+            lambda c, q: (c.query(q).top_k(4)
+                          .prefetch(category="cat-0")
+                          .prefetch(category="cat-3")
+                          .fuse("linear", weights=[0.7, 0.3])),
+        ]
+        for build in builders:
+            for qi in range(2):
+                wire = build(remote, queries[qi]).run()
+                local = build(embedded, queries[qi]).run()
+                assert [(h.id, pytest.approx(h.score, rel=1e-5))
+                        for h in wire] \
+                    == [(h.id, h.score) for h in local]
+        db.close()
+
+    def test_explain_same_plan_echo(self, client, corpus, queries):
+        remote, embedded, db = self._pair(client, corpus)
+        we = remote.query(queries[0]).top_k(5).stages(oversample=4).explain()
+        le = embedded.query(queries[0]).top_k(5).stages(oversample=4) \
+            .explain()
+        assert we.plan == le.plan                  # identical compiled plan
+        assert [h.id for h in we.hits] == [h.id for h in le.hits]
+        assert [(s["stage"], s["k"], s["candidates_out"])
+                for s in we.stages] \
+            == [(s["stage"], s["k"], s["candidates_out"])
+                for s in le.stages]
+        db.close()
+
+    def test_batched_multi_stage_parity(self, client, corpus, queries):
+        remote, embedded, db = self._pair(client, corpus)
+        wire = remote.query(queries[:3]).top_k(4).stages(coarse_k=16).run()
+        local = embedded.query(queries[:3]).top_k(4).stages(coarse_k=16) \
+            .run()
+        assert [[h.id for h in row] for row in wire] \
+            == [[h.id for h in row] for row in local]
+        db.close()
+
+    def test_count_routes(self, server, client, corpus):
+        remote = _make(client, corpus, n=60)
+        assert remote.count() == 60
+        assert remote.count(Predicate("category", "eq", "cat-1")) == 15
+        # raw GET (count everything) and POST (filtered) both route
+        status, env = TestStructuredErrors._raw(
+            server, "GET", "/v1/collections/items/count")
+        assert status == 200 and env["result"]["count"] == 60
+        status, env = TestStructuredErrors._raw(
+            server, "POST", "/v1/collections/items/count",
+            json.dumps({"filter": rq.filter_to_dict(
+                Predicate("in_stock", "eq", True))}))
+        assert status == 200 and env["result"]["count"] == 20
+
+
+class TestPlanCodec:
+    def test_round_trip_every_stage_type(self):
+        from repro.api import (AnnStage, FusionStage, PrefetchStage,
+                               QueryPlan, RescoreStage, plan_from_dict,
+                               plan_to_dict)
+        vec = np.arange(4, dtype=np.float32)
+        nested = QueryPlan(k=4, vector=None, stages=(
+            PrefetchStage(plans=(
+                QueryPlan(k=4, vector=vec, stages=(AnnStage(k=4),)),)),
+            FusionStage(k=4, method="linear", weights=(1.0,))))
+        plan = QueryPlan(k=5, vector=vec, stages=(
+            PrefetchStage(plans=(
+                QueryPlan(k=8, vector=vec + 1, stages=(
+                    AnnStage(k=32, ef=64, expansion_width=2,
+                             filter=Predicate("category", "eq", "x"),
+                             rescore=False),
+                    RescoreStage(k=8))),
+                nested)),                     # nested prefetch round-trips
+            FusionStage(k=20, method="rrf", rrf_k=10),
+            RescoreStage(k=5)))
+        d = plan_to_dict(plan)
+        rebuilt = plan_to_dict(plan_from_dict(json.loads(json.dumps(d))))
+        assert rebuilt == d
+
+    @pytest.mark.parametrize("bad", [
+        "not-a-dict",
+        {"k": 5},                                       # no stages
+        {"k": 5, "stages": []},                         # empty stages
+        {"k": 0, "stages": [{"op": "ann", "k": 5}]},    # bad k
+        {"k": 5, "stages": [{"op": "warp", "k": 5}]},   # unknown op
+        {"k": 5, "stages": [{"op": "ann", "k": 0}]},    # bad stage k
+        {"k": 5, "stages": [{"op": "prefetch"}]},       # prefetch w/o plans
+        {"v": 99, "k": 5, "stages": [{"op": "ann", "k": 5}]},  # bad version
+        {"k": 5, "stages": [{"op": "fusion", "k": 5, "method": "max"}]},
+    ])
+    def test_malformed_plans_raise_schema_error(self, bad):
+        from repro.api import plan_from_dict
+        with pytest.raises(SchemaError):
+            plan_from_dict(bad)
+
+    @pytest.mark.parametrize("stages", [
+        [{"op": "rescore", "k": 5}],                    # rescore first
+        [{"op": "ann", "k": 5}, {"op": "ann", "k": 5}],  # ann not first
+        [{"op": "ann", "k": 5}, {"op": "prefetch", "plans": [
+            {"k": 5, "stages": [{"op": "ann", "k": 5}],
+             "vector": [0.0] * DIM}]}],                 # prefetch not first
+        [{"op": "prefetch", "plans": [
+            {"k": 5, "stages": [{"op": "ann", "k": 5}],
+             "vector": [0.0] * DIM}]}],                 # prefetch w/o fusion
+        [{"op": "ann", "k": 3}],                        # final k < plan k
+    ])
+    def test_invalid_stage_orderings_rejected(self, stages, corpus):
+        from repro.api import plan_from_dict
+        db = Database()
+        col = _make(db, corpus, n=30)
+        plan = plan_from_dict({"k": 5, "vector": [0.0] * DIM,
+                               "stages": stages})
+        with pytest.raises(SchemaError):
+            col.execute_plan(plan)
+        db.close()
+
+    def test_malformed_plan_wire_error_envelope(self, server, client,
+                                                corpus):
+        _make(client, corpus, n=30)
+        for plan in ({"k": 3, "stages": [{"op": "bogus"}]},
+                     {"v": 9, "k": 3, "stages": [{"op": "ann", "k": 3}]},
+                     {"k": 3, "stages": [{"op": "rescore", "k": 3}],
+                      "vector": [0.0] * DIM}):
+            status, envelope = TestStructuredErrors._raw(
+                server, "POST", "/v1/collections/items/search",
+                json.dumps({"plan": plan}))
+            assert status == 400
+            assert envelope["error"]["code"] == rq.SCHEMA_ERROR
+            assert "Traceback" not in json.dumps(envelope)
+        # neither vector nor plan
+        status, envelope = TestStructuredErrors._raw(
+            server, "POST", "/v1/collections/items/search", "{}")
+        assert status == 400
+        assert envelope["error"]["code"] == rq.INVALID_ARGUMENT
+
+    def test_batched_root_vector_rejected_on_prefetch_plans(self, corpus):
+        """A hand-authored wire plan with a 2-D root vector + prefetch must
+        fail validation (400), not silently fuse one row or crash an
+        INTERNAL on a trailing rescore stage."""
+        from repro.api import plan_from_dict
+        db = Database()
+        col = _make(db, corpus, n=30)
+        plan = plan_from_dict({
+            "k": 3, "vector": [[0.0] * DIM, [1.0] * DIM],
+            "stages": [
+                {"op": "prefetch", "plans": [
+                    {"k": 3, "vector": [0.0] * DIM,
+                     "stages": [{"op": "ann", "k": 3}]}]},
+                {"op": "fusion", "k": 3}]})
+        with pytest.raises(SchemaError):
+            col.execute_plan(plan)
+        db.close()
+
+    @pytest.mark.parametrize("bad_plan", [
+        {"k": 3, "vector": [[0.1], [0.2, 0.3]],        # ragged vector
+         "stages": [{"op": "ann", "k": 3}]},
+        {"k": 3, "vector": [0.0] * 4, "stages": [
+            {"op": "prefetch", "plans": [
+                {"k": 3, "vector": [0.0] * 4,
+                 "stages": [{"op": "ann", "k": 3}]}]},
+            {"op": "fusion", "k": 3, "weights": 5}]},   # non-list weights
+        {"k": 3, "vector": [0.0] * 4, "stages": [
+            {"op": "prefetch", "plans": [
+                {"k": 3, "vector": [0.0] * 4,
+                 "stages": [{"op": "ann", "k": 3}]}]},
+            {"op": "fusion", "k": 3, "rrf_k": "abc"}]},  # bad rrf_k
+        {"k": 3, "vector": [0.0] * 4,
+         "stages": [{"op": "ann", "k": 3, "ef": "fast"}]},   # bad ef
+        {"k": 3, "vector": [0.0] * 4,
+         "stages": [{"op": "ann", "k": 3, "rescore": "yes"}]},
+    ])
+    def test_codec_rejects_malformed_fields_as_schema_error(self, bad_plan):
+        """Interpreter errors (TypeError/ValueError) must never escape the
+        codec: every malformed plan is a SchemaError -> SCHEMA_ERROR."""
+        from repro.api import plan_from_dict
+        with pytest.raises(SchemaError):
+            plan_from_dict(bad_plan)
