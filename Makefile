@@ -3,7 +3,7 @@
 PY ?= python
 
 .PHONY: test smoke serve-smoke serve bench bench-smoke bench-serve \
-	bench-query bench-query-smoke ci
+	bench-query bench-query-smoke bench-hybrid bench-hybrid-smoke ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -43,5 +43,17 @@ bench-query-smoke:
 		--n 2000 --dim 32 --queries 16 --oversamples 2,4 \
 		--coarse-efs 32,64 --min-recall 0.5 \
 		--out BENCH_query.json --timestamp $$(date +%s)
+
+# dense+sparse hybrid on a keyword-skewed corpus -> BENCH_hybrid.json
+bench-hybrid:
+	PYTHONPATH=src $(PY) benchmarks/bench_query.py --hybrid \
+		--out BENCH_hybrid.json --timestamp $$(date +%s)
+
+# CI-sized hybrid run: RRF fusion may never lose hybrid-oracle recall
+# vs the dense leg alone
+bench-hybrid-smoke:
+	PYTHONPATH=src $(PY) benchmarks/bench_query.py --hybrid \
+		--n 2000 --dim 32 --queries 24 --index flat --min-recall 0.6 \
+		--out BENCH_hybrid.json --timestamp $$(date +%s)
 
 ci: test smoke serve-smoke

@@ -1,7 +1,7 @@
-"""Query-plan benchmark: single-stage vs coarse-to-fine retrieval sweep.
+"""Query-plan benchmark: coarse-to-fine retrieval sweep + hybrid search.
 
-Builds a quantized (default PQ) collection and compares the legacy
-engine-internal rescore path against explicit coarse-to-fine plans
+Default mode builds a quantized (default PQ) collection and compares the
+legacy engine-internal rescore path against explicit coarse-to-fine plans
 (`.stages(oversample=...)` + `.ef(...)`) over an oversample × coarse-ef
 grid, reporting QPS and recall@k as JSON:
 
@@ -14,6 +14,15 @@ must reach the floor AND the grid point matching the schema's
 rescore_multiplier must reach the legacy rescore path's recall — a
 quality ratchet so the plan layer can never silently lose what
 `rescore=True` delivered.
+
+`--hybrid` switches to the dense+sparse benchmark: a keyword-skewed
+corpus where each doc carries a tag word *uncorrelated* with its vector
+cluster (tag = i % T while clusters follow the mixture), so neither
+modality alone can reconstruct the hybrid ground truth.  Queries pair an
+anchor doc's (noised) vector with its tag text; the oracle is RRF over
+exact dense ranking and brute-force BM25.  Reports sparse-only /
+dense-only / RRF-fused QPS + recall@k, and gates on
+fused recall >= dense-only recall.
 """
 
 from __future__ import annotations
@@ -26,9 +35,11 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.api import Database, VectorField
+from repro.api import CollectionSchema, Database, TextField, VectorField
+from repro.core.executor import fuse_rrf
 from repro.core.hnsw_build import exact_knn
 from repro.core.pq import PQConfig
+from repro.core.sparse import TokenizerConfig, bm25_reference, rank_scores
 from repro.data.synthetic import gaussian_mixture
 
 REPEATS = 3          # best-of timing, first call pays compilation
@@ -93,6 +104,103 @@ def run_bench(args) -> Dict:
     return out
 
 
+# ------------------------------------------------------------------- hybrid
+_NOISE_WORDS = ["alpha", "beta", "gamma", "delta", "omega", "sigma",
+                "lambda", "kappa", "theta", "zeta", "epsilon", "iota"]
+
+
+def _hybrid_corpus(args, rng):
+    """Keyword-skewed corpus: tag words cycle i % T while vector clusters
+    follow the mixture, so tag-mates scatter across vector space and the
+    sparse leg carries signal the dense leg cannot see (and vice versa)."""
+    vectors = gaussian_mixture(args.n, args.dim, seed=0)
+    texts = []
+    for i in range(args.n):
+        tag = f"tag{i % args.tags}"
+        words = [tag] * int(rng.integers(1, 4))
+        words += list(rng.choice(_NOISE_WORDS, size=rng.integers(2, 6)))
+        rng.shuffle(words)
+        texts.append(" ".join(words))
+    return vectors, texts
+
+
+def run_hybrid(args) -> Dict:
+    rng = np.random.default_rng(11)
+    vectors, texts = _hybrid_corpus(args, rng)
+    db = Database()
+    col = db.create_collection(CollectionSchema(
+        name="bench_hybrid",
+        vector=VectorField(dim=args.dim, index=args.index,
+                           quantization="none", builder="bulk"),
+        fields=(TextField("body"),)))
+    col.upsert([f"v-{i}" for i in range(args.n)], vectors,
+               [{"body": t} for t in texts])
+
+    # queries: an anchor doc's noised vector + its tag as keyword text
+    anchors = rng.choice(args.n, size=args.queries, replace=False)
+    qvecs = (vectors[anchors]
+             + 0.15 * rng.standard_normal((args.queries, args.dim))
+             ).astype(np.float32)
+    qtexts = [f"tag{a % args.tags}" for a in anchors]
+
+    # oracle: RRF of exact dense ranking and brute-force BM25, each leg
+    # contributing a top-k list — the same leg size the engine's implicit
+    # hybrid plan uses, so the oracle is exactly "both legs done perfectly"
+    k = args.k
+    dense_gt = exact_knn(qvecs, vectors, k, metric="cosine")
+    cfg = TokenizerConfig()
+    oracle = []
+    for qi in range(args.queries):
+        sparse_d, sparse_rows = rank_scores(
+            bm25_reference(texts, qtexts[qi], cfg), k)
+        dense_rows = dense_gt[qi].astype(np.int64)
+        dense_d = np.arange(k, dtype=np.float32)     # RRF only needs order
+        fused_d, fused_rows = fuse_rrf(
+            [(dense_d[None, :], dense_rows[None, :]),
+             (sparse_d[None, :], sparse_rows[None, :])], k)
+        oracle.append({f"v-{r}" for r in fused_rows if r >= 0})
+
+    col.query(qvecs[0]).top_k(1).run()          # build outside timing
+
+    def measure(build) -> Dict:
+        def once():
+            return [build(qi).run() for qi in range(args.queries)]
+        secs, batches = _timed(once)
+        hits = sum(len({h.id for h in row} & oracle[qi])
+                   for qi, row in enumerate(batches))
+        return {"qps": round(args.queries / secs, 1),
+                "recall_vs_hybrid_oracle":
+                    round(hits / (args.queries * k), 4)}
+
+    out: Dict = {
+        "bench": "hybrid_search",
+        "n": args.n, "dim": args.dim, "index": args.index, "k": k,
+        "queries": args.queries, "tags": args.tags,
+        "sparse_only": measure(
+            lambda qi: col.query().text(qtexts[qi]).top_k(k)),
+        "dense_only": measure(
+            lambda qi: col.query(qvecs[qi]).top_k(k)),
+        "fused_rrf": measure(
+            lambda qi: col.query(qvecs[qi]).text(qtexts[qi]).top_k(k)),
+    }
+    if args.timestamp is not None:
+        out["timestamp"] = args.timestamp
+    return out
+
+
+def gate_hybrid(out: Dict, min_recall: Optional[float]) -> List[str]:
+    """CI ratchet: fusing a sparse leg in must never lose hybrid-oracle
+    recall vs the dense leg alone (plus an optional absolute floor)."""
+    failures: List[str] = []
+    fused = out["fused_rrf"]["recall_vs_hybrid_oracle"]
+    dense = out["dense_only"]["recall_vs_hybrid_oracle"]
+    if fused < dense:
+        failures.append(f"fused recall {fused:.3f} < dense-only {dense:.3f}")
+    if min_recall is not None and fused < min_recall:
+        failures.append(f"fused recall {fused:.3f} < floor {min_recall}")
+    return failures
+
+
 def gate(out: Dict, min_recall: Optional[float]) -> List[str]:
     failures: List[str] = []
     if min_recall is None:
@@ -136,11 +244,20 @@ def main() -> int:
                     help="run timestamp (passed in at the CLI/make boundary)")
     ap.add_argument("--min-recall", type=float, default=None,
                     help="fail unless best grid recall reaches this AND the "
-                         "matched-oversample cell >= legacy rescore recall")
+                         "matched-oversample cell >= legacy rescore recall "
+                         "(in --hybrid mode: absolute fused-recall floor)")
+    ap.add_argument("--hybrid", action="store_true",
+                    help="run the dense+sparse hybrid benchmark instead")
+    ap.add_argument("--tags", type=int, default=32,
+                    help="hybrid mode: distinct keyword tags in the corpus")
     args = ap.parse_args()
 
-    out = run_bench(args)
-    failures = gate(out, args.min_recall)
+    if args.hybrid:
+        out = run_hybrid(args)
+        failures = gate_hybrid(out, args.min_recall)
+    else:
+        out = run_bench(args)
+        failures = gate(out, args.min_recall)
     out["gate_failures"] = failures
     text = json.dumps(out, indent=2)
     print(text)

@@ -6,8 +6,9 @@ Covers: declarative schema (vector field + typed metadata), string-id
 upsert, fluent filtered queries, quantized collections with rescore,
 delete/tombstone + compact, Database save/load persistence, client mode
 (the same fluent query over the embedded HTTP server via QuantixarClient),
-and declarative query plans (coarse-to-fine `.stages()`, prefetch + RRF
-fusion, filtered `count()`, and `.explain()` introspection).
+declarative query plans (coarse-to-fine `.stages()`, prefetch + RRF
+fusion, filtered `count()`, and `.explain()` introspection), and hybrid
+search (BM25 keyword via `TextField` + `.text()`, fused with dense ANN).
 """
 
 import os
@@ -160,6 +161,45 @@ def main():
                           negatives=["item-99"]).top_k(3).run()
     print(f"count(category==cat-3)={n_cat3}; "
           f"recommend from examples -> {[h.id for h in rec]}")
+
+    # 8. Hybrid search: BM25 keyword + dense fusion -------------------------
+    # A TextField on the schema maintains an incremental BM25 inverted index;
+    # .text() alone is pure keyword search, vector + .text() compiles to a
+    # prefetch of [dense ann, sparse bm25] legs fused by reciprocal rank.
+    from repro.api import TextField  # noqa: E402
+
+    tags = [f"tag{i % 16}" for i in range(N)]
+    docs = db.create_collection(CollectionSchema(
+        name="docs",
+        vector=VectorField(dim=DIM, metric="cosine", index="flat"),
+        fields=(TextField("body"), KeywordField("lang"))))
+    docs.upsert(ids, corpus,
+                [{"body": f"{t} quick brown fox", "lang": "en" if i % 2
+                  else "de"} for i, t in enumerate(tags)])
+
+    kw = docs.query().text("tag3 fox").top_k(3).run()
+    print(f"keyword 'tag3 fox': {[h.id for h in kw]}")
+    kw_f = (docs.query().text("tag3 fox").filter(lang="en").top_k(3).run())
+    langs = {docs.get(h.id).payload["lang"] for h in kw_f}
+    print(f"filtered keyword (lang==en): {[h.id for h in kw_f]} "
+          f"langs={langs}")
+
+    hybrid = docs.query(queries[0]).text("tag3 fox").top_k(5)
+    ex = hybrid.explain()
+    legs = [c[0]["stage"] for c in ex.stages[0]["children"]]
+    print(f"hybrid query -> {[s['stage'] for s in ex.stages]} "
+          f"legs={legs}; hits={[h.id for h in hybrid.run()]}")
+    sparse_stats = {k: v for k, v in docs.stats().items()
+                    if k.startswith("sparse_")}
+    print(f"sparse stats: {sparse_stats}")
+
+    # the same hybrid query over the wire, hit-for-hit
+    server = QuantixarHTTPServer(QuantixarService(db)).start()
+    remote_docs = QuantixarClient(server.url).collection("docs")
+    wire = (remote_docs.query(queries[0]).text("tag3 fox").top_k(5).run())
+    print(f"hybrid wire == embedded hits: "
+          f"{[h.id for h in wire] == [h.id for h in hybrid.run()]}")
+    server.shutdown(close_service=False)
     db.close()
 
 

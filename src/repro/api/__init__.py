@@ -40,22 +40,25 @@ from .collection import (Collection, CollectionClosed, Entity,
                          QueryRetriesExhausted)
 from .database import Database
 from .plan import (AnnStage, FusionStage, PlanExplain, PrefetchStage,
-                   QueryPlan, RescoreStage, plan_from_dict, plan_to_dict)
+                   QueryPlan, RescoreStage, SparseStage, plan_from_dict,
+                   plan_to_dict)
 from .query import Hit, Query
 from .requests import (ApiError, ErrorInfo, RemoteInvalidArgument,
                        RemoteNotFound, RemoteSchemaError, RemoteUnavailable)
 from .schema import (BatcherConfig, BoolField, CollectionSchema, KeywordField,
-                     MetadataField, NumericField, SchemaError, VectorField)
+                     MetadataField, NumericField, SchemaError, TextField,
+                     VectorField)
 
 __all__ = [
     "And", "Filter", "Not", "Or", "Predicate",
     "Collection", "CollectionClosed", "Entity", "Database", "Hit", "Query",
     "QueryRetriesExhausted",
     "AnnStage", "FusionStage", "PlanExplain", "PrefetchStage", "QueryPlan",
-    "RescoreStage", "plan_from_dict", "plan_to_dict",
+    "RescoreStage", "SparseStage", "plan_from_dict", "plan_to_dict",
     "QuantixarClient", "RemoteCollection",
     "ApiError", "ErrorInfo", "RemoteInvalidArgument", "RemoteNotFound",
     "RemoteSchemaError", "RemoteUnavailable",
     "BatcherConfig", "BoolField", "CollectionSchema", "KeywordField",
-    "MetadataField", "NumericField", "SchemaError", "VectorField",
+    "MetadataField", "NumericField", "SchemaError", "TextField",
+    "VectorField",
 ]

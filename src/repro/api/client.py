@@ -245,8 +245,9 @@ class RemoteCollection:
             vector=np.asarray(entity.get("vector", ()), dtype=np.float32),
             payload=entity.get("payload") or {})
 
-    def query(self, vector: np.ndarray) -> Query:
-        """The embedded fluent builder, executed over the wire."""
+    def query(self, vector: Optional[np.ndarray] = None) -> Query:
+        """The embedded fluent builder, executed over the wire.  Vectorless
+        queries (`.query().text("...")`) compile to sparse keyword plans."""
         return Query(self, vector)
 
     def recommend(self, positives: Sequence[Any],

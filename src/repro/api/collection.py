@@ -32,6 +32,7 @@ import numpy as np
 from ..core.engine import QuantixarEngine
 from ..core.executor import AnnParams, ExecResult, PlanExecutor
 from ..core.metadata import Filter
+from ..core.sparse import SparseIndex
 from ..serving.batcher import RequestBatcher
 from .plan import (AnnStage, PlanExplain, QueryPlan, plan_to_dict,
                    recommend_vector, validate_filter, validate_plan)
@@ -70,6 +71,9 @@ class Collection:
     def __init__(self, schema: CollectionSchema):
         self.schema = schema
         self._engine = QuantixarEngine(schema.vector.to_engine_config())
+        # one BM25 inverted index per TextField, row-aligned with the engine
+        self._sparse = {f.name: SparseIndex(f.tokenizer())
+                        for f in schema.text_fields()}
         self._ids: List[str] = []        # row -> string id (dead rows too)
         self._live: List[bool] = []      # row -> liveness (False = tombstone)
         self._row_of: Dict[str, int] = {}   # live id -> row
@@ -136,6 +140,10 @@ class Collection:
         with self._lock:
             row0 = len(self._ids)
             self._engine.add(vectors, validated)
+            for name, index in self._sparse.items():
+                # one entry per row (None for rows without the field) keeps
+                # sparse row ids aligned with engine rows
+                index.add([p.get(name) for p in validated])
             for off, id_ in enumerate(ids):
                 old = self._row_of.pop(id_, None)
                 if old is not None:
@@ -171,6 +179,8 @@ class Collection:
             dead = self.tombstones
             if dead == 0:
                 self._engine.seal()
+                for index in self._sparse.values():
+                    index.seal()
                 return 0
             live_rows = [r for r, alive in enumerate(self._live) if alive]
             vectors = self._engine.vectors[live_rows]
@@ -179,6 +189,10 @@ class Collection:
 
             self._engine = QuantixarEngine(
                 self.schema.vector.to_engine_config())
+            # text payloads ride in the metadata records, so re-upserting
+            # rebuilds the sparse indexes over live rows automatically
+            self._sparse = {f.name: SparseIndex(f.tokenizer())
+                            for f in self.schema.text_fields()}
             self._ids, self._live, self._row_of = [], [], {}
             self._mask = None
             self._epoch += 1   # all row numbers just changed
@@ -195,8 +209,10 @@ class Collection:
             return Entity(id=id, vector=self._engine.vectors[row].copy(),
                           payload=self._engine.metadata.record(row))
 
-    def query(self, vector: np.ndarray) -> Query:
-        """Start a fluent query: `col.query(v).filter(...).top_k(5).run()`."""
+    def query(self, vector: Optional[np.ndarray] = None) -> Query:
+        """Start a fluent query: `col.query(v).filter(...).top_k(5).run()`.
+        With no vector, chain `.text("...")` for a pure keyword (BM25)
+        search; with both, the query fuses dense + sparse (hybrid)."""
         return Query(self, vector)
 
     def recommend(self, positives: Sequence[Any],
@@ -290,6 +306,24 @@ class Collection:
                                        mask=self._live_mask(),
                                        params=params)
 
+    def _sparse_search(self, field: str, text: str, k: int,
+                       flt: Optional[Filter] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """One masked BM25 pass over a text field's inverted index — the
+        sparse twin of `_engine_search`.  Returns (1, k) padded candidate
+        arrays whose distances are negated BM25 scores (lower = better)."""
+        with self._lock:
+            index = self._sparse.get(field)
+            if index is None:       # validate_plan resolves fields first
+                raise SchemaError(f"collection {self.name!r} has no text "
+                                  f"field {field!r}")
+            mask = self._live_mask()
+            if flt is not None:
+                fmask = self._engine.metadata.evaluate(flt)
+                mask = fmask if mask is None else (mask & fmask)
+            d, rows = index.search(text, k, mask=mask)
+            return d[None, :], rows[None, :]
+
     def _execute_direct(self, plan: QueryPlan,
                         deadline: Optional[float] = None) -> ExecResult:
         """Run a plan through the staged executor (caller holds the lock)."""
@@ -304,7 +338,9 @@ class Collection:
                 ids=np.full((n, plan.k), -1, dtype=np.int64),
                 stages=[])
         executor = PlanExecutor(self._engine_search, self._engine,
-                                mask=self._live_mask())
+                                mask=self._live_mask(),
+                                sparse_fn=(self._sparse_search
+                                           if self._sparse else None))
         return executor.execute(plan, deadline=deadline)
 
     @property
@@ -415,6 +451,20 @@ class Collection:
         serving = (batcher.stats() if batcher is not None
                    else RequestBatcher.zero_stats())
         out.update({f"serving_{k}": v for k, v in serving.items()})
+        if self._sparse:
+            with self._lock:
+                agg = [idx.stats() for idx in self._sparse.values()]
+            out.update({
+                "sparse_fields": len(agg),
+                "sparse_docs_indexed": sum(s["docs_indexed"] for s in agg),
+                "sparse_vocab": sum(s["vocab"] for s in agg),
+                "sparse_postings": sum(s["postings"] for s in agg),
+                "sparse_sealed_postings": sum(s["sealed_postings"]
+                                              for s in agg),
+                "sparse_delta_postings": sum(s["delta_postings"]
+                                             for s in agg),
+                "sparse_seals": sum(s["seals"] for s in agg),
+            })
         return out
 
     # ----------------------------------------------------------- persistence
@@ -423,6 +473,12 @@ class Collection:
             state = dict(self._engine.state_dict())
             state["__ids__"] = np.asarray(self._ids, dtype=object)
             state["__live__"] = np.asarray(self._live, dtype=bool)
+            # "__sparse__" prefix keeps these out of the engine sub-state;
+            # the packed form preserves the sealed/delta split, so a
+            # loaded index keeps absorbing upserts without a rebuild
+            for name, index in self._sparse.items():
+                for key, arr in index.state_dict().items():
+                    state[f"__sparse__{name}/{key}"] = arr
             return state
 
     @classmethod
@@ -434,6 +490,26 @@ class Collection:
                         if not k.startswith("__")}
         col._engine = QuantixarEngine.from_state_dict(
             schema.vector.to_engine_config(), engine_state)
+        sparse_state: Dict[str, Dict[str, np.ndarray]] = {}
+        for key, arr in state.items():
+            if key.startswith("__sparse__"):
+                # index state keys carry no "/", so the last one separates
+                # the field name from the array key
+                name, sub = key[len("__sparse__"):].rsplit("/", 1)
+                sparse_state.setdefault(name, {})[sub] = arr
+        col._sparse = {}
+        for fld in schema.text_fields():
+            if fld.name in sparse_state:
+                col._sparse[fld.name] = SparseIndex.from_state_dict(
+                    sparse_state[fld.name], fld.tokenizer())
+            else:
+                # checkpoint predates the field (or was written without the
+                # index): rebuild from the metadata records once, here
+                index = SparseIndex(fld.tokenizer())
+                records = col._engine.metadata
+                index.add([records.record(r).get(fld.name)
+                           for r in range(len(records))])
+                col._sparse[fld.name] = index
         col._ids = [str(i) for i in state["__ids__"]]
         col._live = [bool(b) for b in state["__live__"]]
         col._row_of = {i: r for r, (i, alive)

@@ -10,6 +10,10 @@ wire (the `Search` op carries the plan dict).  Stage types:
                       defers to the engine config (the legacy single-stage
                       behaviour), ``False`` forces a raw code-domain pass
                       (the coarse stage of a coarse-to-fine plan);
+  * `SparseStage`   — a BM25 keyword pass over a schema `TextField`'s
+                      inverted index (standalone keyword search, filtered
+                      via its own / the root filter, or fused with dense
+                      ANN inside a prefetch sub-plan);
   * `RescoreStage`  — exact float re-rank of the previous stage's
                       (oversampled) candidates down to ``k``;
   * `PrefetchStage` — N independent sub-plans, each with its own vector,
@@ -87,6 +91,33 @@ class RescoreStage:
 
 
 @dataclasses.dataclass(frozen=True)
+class SparseStage:
+    """BM25 keyword pass over a schema `TextField`'s inverted index; like
+    `AnnStage` it must open a (sub-)plan's pipeline.  `field=None` targets
+    the collection's single text field; candidate scores come back negated
+    (lower = better) so they merge with the engine-wide ordering."""
+
+    text: str
+    k: int
+    field: Optional[str] = None
+    filter: Optional[Filter] = None
+    op = "sparse"
+
+    def __post_init__(self):
+        if not isinstance(self.text, str) or not self.text.strip():
+            raise SchemaError(
+                f"sparse stage: 'text' must be a non-empty string, "
+                f"got {self.text!r}")
+        if isinstance(self.k, bool) or not isinstance(self.k, int) \
+                or self.k < 1:
+            raise SchemaError(
+                f"sparse stage: 'k' must be a positive int, got {self.k!r}")
+        if self.field is not None and not isinstance(self.field, str):
+            raise SchemaError(
+                f"sparse stage: 'field' must be a string, got {self.field!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class PrefetchStage:
     """N independent sub-plans whose result lists feed a fusion stage."""
 
@@ -111,7 +142,8 @@ class FusionStage:
                               f"have {FUSION_METHODS}")
 
 
-Stage = Union[AnnStage, RescoreStage, PrefetchStage, FusionStage]
+Stage = Union[AnnStage, SparseStage, RescoreStage, PrefetchStage,
+              FusionStage]
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -166,6 +198,13 @@ def _stage_to_dict(stage: Stage) -> Dict[str, Any]:
             out["filter"] = _filter_to_dict(stage.filter)
         if stage.rescore is not None:
             out["rescore"] = stage.rescore
+        return out
+    if isinstance(stage, SparseStage):
+        out = {"op": "sparse", "k": stage.k, "text": stage.text}
+        if stage.field is not None:
+            out["field"] = stage.field
+        if stage.filter is not None:
+            out["filter"] = _filter_to_dict(stage.filter)
         return out
     if isinstance(stage, RescoreStage):
         return {"op": "rescore", "k": stage.k}
@@ -229,6 +268,17 @@ def _stage_from_dict(d: Any) -> Stage:
             expansion_width=_opt_int(d, "expansion_width", "ann stage", 1),
             filter=_filter_from_dict(d.get("filter")),
             rescore=rescore)
+    if op == "sparse":
+        field = d.get("field")
+        if field is not None and not isinstance(field, str):
+            raise SchemaError(
+                f"sparse stage: 'field' must be a string, got {field!r}")
+        # SparseStage.__post_init__ rejects empty/non-string text
+        return SparseStage(
+            text=d.get("text"),
+            k=_require_pos_int(d, "k", "sparse stage"),
+            field=field,
+            filter=_filter_from_dict(d.get("filter")))
     if op == "rescore":
         return RescoreStage(k=_require_pos_int(d, "k", "rescore stage"))
     if op == "prefetch":
@@ -255,8 +305,8 @@ def _stage_from_dict(d: Any) -> Stage:
             k=_require_pos_int(d, "k", "fusion stage"),
             method=d.get("method", "rrf"),
             weights=weights, rrf_k=rrf_k)
-    raise SchemaError(f"unknown plan stage op {op!r}; "
-                      f"have ('ann', 'rescore', 'prefetch', 'fusion')")
+    raise SchemaError(f"unknown plan stage op {op!r}; have "
+                      f"('ann', 'sparse', 'rescore', 'prefetch', 'fusion')")
 
 
 def plan_from_dict(d: Any) -> QueryPlan:
@@ -319,6 +369,21 @@ def validate_plan(schema: CollectionSchema, plan: QueryPlan,
             flt = (validate_filter(schema, stage.filter)
                    if stage.filter is not None else None)
             stages.append(dataclasses.replace(stage, filter=flt))
+        elif isinstance(stage, SparseStage):
+            if pos != 0:
+                raise SchemaError("sparse stage must open the plan "
+                                  f"(found at position {pos})")
+            if vector is not None and vector.ndim != 1:
+                # sparse scoring is per-query; a batched root vector has
+                # no per-row text to pair with
+                raise SchemaError(
+                    "sparse stages take single queries; got a batched "
+                    f"root vector of shape {vector.shape}")
+            field = schema.resolve_text_field(stage.field)
+            flt = (validate_filter(schema, stage.filter)
+                   if stage.filter is not None else None)
+            stages.append(dataclasses.replace(stage, field=field.name,
+                                              filter=flt))
         elif isinstance(stage, PrefetchStage):
             if pos != 0:
                 raise SchemaError("prefetch stage must open the plan "

@@ -24,6 +24,11 @@ classic single pass:
     `rescore=True` oversampling);
   * `.prefetch(vector=..., k=..., filter=...)` — add an independent
     sub-query; combine several with `.fuse("rrf")` or `.fuse("linear")`;
+  * `.text("...")` — BM25 keyword search over a schema `TextField`.
+    Alone (`col.query().text("...")`) it compiles to a pure sparse plan;
+    with a query vector it becomes a hybrid plan — dense and sparse
+    prefetch legs merged by RRF (or whatever `.fuse()` picked);
+    `.prefetch(text=...)` adds further keyword legs explicitly;
   * `.explain()` — execute and return the compiled plan with per-stage
     candidate counts and timings (`PlanExplain`).
 
@@ -42,7 +47,7 @@ import numpy as np
 
 from ..core.metadata import And, Filter, Predicate
 from .plan import (AnnStage, FusionStage, PlanExplain, PrefetchStage,
-                   QueryPlan, RescoreStage, validate_filter)
+                   QueryPlan, RescoreStage, SparseStage, validate_filter)
 from .schema import SchemaError
 
 __all__ = ["Hit", "Query", "validate_filter"]
@@ -72,7 +77,8 @@ class Hit:
 
 @dataclasses.dataclass(frozen=True)
 class _PrefetchSpec:
-    """One `.prefetch()` call, compiled to a sub-plan at run time."""
+    """One `.prefetch()` call, compiled to a sub-plan at run time.  A spec
+    is either dense (vector / ef / width knobs) or sparse (`text` set)."""
 
     vector: Optional[np.ndarray]      # None: reuse the root query vector
     k: Optional[int]                  # None: fusion stage k
@@ -80,22 +86,28 @@ class _PrefetchSpec:
     expansion_width: Optional[int]
     filter: Optional[Filter]
     coarse_k: Optional[int]           # per-sub-plan coarse-to-fine
+    text: Optional[str] = None        # set: this leg is a BM25 keyword pass
+    text_field: Optional[str] = None  # None: the schema's single text field
 
 
 class Query:
     """Immutable builder: every setter returns a new `Query` (copy-on-write),
     so base queries can be shared and specialized freely."""
 
-    def __init__(self, collection, vector: np.ndarray):
+    def __init__(self, collection, vector: Optional[np.ndarray] = None):
         self._col = collection
-        self._vec = np.asarray(vector, dtype=np.float32)
-        if self._vec.ndim not in (1, 2):
-            raise SchemaError(
-                f"query vector must be 1-D or 2-D, got {self._vec.shape}")
-        if self._vec.shape[-1] != collection.schema.vector.dim:
-            raise SchemaError(
-                f"query dim {self._vec.shape[-1]} != collection dim "
-                f"{collection.schema.vector.dim}")
+        self._vec: Optional[np.ndarray] = None
+        if vector is not None:
+            self._vec = np.asarray(vector, dtype=np.float32)
+            if self._vec.ndim not in (1, 2):
+                raise SchemaError(
+                    f"query vector must be 1-D or 2-D, got {self._vec.shape}")
+            if self._vec.shape[-1] != collection.schema.vector.dim:
+                raise SchemaError(
+                    f"query dim {self._vec.shape[-1]} != collection dim "
+                    f"{collection.schema.vector.dim}")
+        self._text: Optional[str] = None
+        self._text_field: Optional[str] = None
         self._k = 10
         self._flt: Optional[Filter] = None
         self._ef: Optional[int] = None
@@ -127,6 +139,22 @@ class Query:
     def where(self, column: str, op: str, value: Any) -> "Query":
         """Sugar for `.filter(Predicate(column, op, value))`."""
         return self.filter(Predicate(column, op, value))
+
+    def text(self, text: str, field: Optional[str] = None) -> "Query":
+        """BM25 keyword search over a schema `TextField`.  On a vectorless
+        query (`col.query().text("...")`) this is the whole search; with a
+        query vector it adds a sparse leg next to the dense one and the two
+        are rank-fused (RRF unless `.fuse()` chose otherwise).  `field`
+        defaults to the collection's single text field."""
+        if not isinstance(text, str) or not text.strip():
+            raise SchemaError(
+                f"text() needs a non-empty string, got {text!r}")
+        if field is not None and not isinstance(field, str):
+            raise SchemaError(f"text field must be a string, got {field!r}")
+        q = self._clone()
+        q._text = text
+        q._text_field = field
+        return q
 
     def top_k(self, k: int) -> "Query":
         if k <= 0:
@@ -184,11 +212,25 @@ class Query:
                  expansion_width: Optional[int] = None,
                  filter: Optional[Filter] = None,
                  coarse_k: Optional[int] = None,
+                 text: Optional[str] = None,
+                 text_field: Optional[str] = None,
                  **equals: Any) -> "Query":
-        """Add one independent sub-query (its own vector / filter / ef /
-        width, optional per-sub-plan coarse-to-fine).  Call repeatedly for
+        """Add one independent sub-query — dense (its own vector / filter /
+        ef / width, optional per-sub-plan coarse-to-fine) or sparse
+        (`text=...`, a BM25 pass over `text_field`).  Call repeatedly for
         several sub-queries and pick a merge with `.fuse(...)` (RRF is the
         default when prefetches are present)."""
+        if text is not None:
+            if not isinstance(text, str) or not text.strip():
+                raise SchemaError(
+                    f"prefetch text must be a non-empty string, got {text!r}")
+            if vector is not None or ef is not None \
+                    or expansion_width is not None or coarse_k is not None:
+                raise SchemaError(
+                    "a prefetch leg is dense or sparse, not both: 'text' "
+                    "cannot combine with vector/ef/expansion_width/coarse_k")
+        elif text_field is not None:
+            raise SchemaError("prefetch 'text_field' needs 'text'")
         vec = None
         if vector is not None:
             vec = np.asarray(vector, dtype=np.float32)
@@ -210,7 +252,8 @@ class Query:
         q = self._clone()
         q._prefetch = self._prefetch + (_PrefetchSpec(
             vector=vec, k=k, ef=ef, expansion_width=expansion_width,
-            filter=flt, coarse_k=coarse_k),)
+            filter=flt, coarse_k=coarse_k, text=text,
+            text_field=text_field),)
         return q
 
     def fuse(self, method: str = "rrf", *,
@@ -248,9 +291,46 @@ class Query:
     def _compile(self) -> QueryPlan:
         """Builder state -> declarative `QueryPlan` tree."""
         k = self._k
-        if self._fusion is not None and not self._prefetch:
-            raise SchemaError("fuse() needs at least one prefetch()")
-        if not self._prefetch:
+        prefetch = self._prefetch
+        if self._text is not None:
+            if self._vec is None and not prefetch:
+                # pure keyword search: one sparse stage is the whole plan
+                if self._coarse_k is not None or self._oversample is not None:
+                    raise SchemaError(
+                        "stages() needs a query vector: rescoring keyword "
+                        "hits is a vector-space operation")
+                if self._rescore:
+                    raise SchemaError(
+                        "rescore() needs a query vector; keyword-only "
+                        "queries have nothing to rescore against")
+                if self._fusion is not None:
+                    raise SchemaError(
+                        "fuse() needs at least two search legs; a "
+                        "keyword-only query has one")
+                return QueryPlan(k=k, stages=(SparseStage(
+                    text=self._text, k=k, field=self._text_field,
+                    filter=self._flt),), vector=None)
+            # hybrid: the root text becomes a sparse prefetch leg; without
+            # explicit prefetches the dense leg is implicit — it inherits
+            # the root vector (vector=None on the wire) and knobs
+            sparse_spec = _PrefetchSpec(
+                vector=None, k=None, ef=None, expansion_width=None,
+                filter=None, coarse_k=None, text=self._text,
+                text_field=self._text_field)
+            if not prefetch:
+                prefetch = (_PrefetchSpec(
+                    vector=None, k=None, ef=None, expansion_width=None,
+                    filter=None, coarse_k=None), sparse_spec)
+            else:
+                prefetch = prefetch + (sparse_spec,)
+        if self._fusion is not None and not prefetch:
+            raise SchemaError("fuse() needs at least one prefetch() "
+                              "(or a hybrid .text() query)")
+        if not prefetch:
+            if self._vec is None:
+                raise SchemaError(
+                    "query needs a vector or text: pass a vector to "
+                    "query(...) or add .text('...')")
             coarse = self._coarse(k)
             if coarse is None:                      # classic single pass
                 stages: Tuple[Any, ...] = (AnnStage(
@@ -263,11 +343,11 @@ class Query:
                           RescoreStage(k=k))
             return QueryPlan(k=k, stages=stages, vector=self._vec)
 
-        if self._vec.ndim != 1:
+        if self._vec is not None and self._vec.ndim != 1:
             raise SchemaError("prefetch queries take a 1-D root vector")
         plans = []
         coarse = self._coarse(k)
-        for spec in self._prefetch:
+        for spec in prefetch:
             # with .stages() on a fused query, the coarse pool must come
             # from the sub-queries: each fetches coarse-many raw candidates
             # (no engine-internal rescore) and the trailing RescoreStage
@@ -281,6 +361,13 @@ class Query:
                 sub_flt = spec.filter
             else:
                 sub_flt = And((self._flt, spec.filter))
+            if spec.text is not None:
+                # sparse leg: the whole sub-plan is one BM25 pass fetching
+                # the same oversampled pool size as its dense siblings
+                plans.append(QueryPlan(k=sub_k, stages=(SparseStage(
+                    text=spec.text, k=sub_k, field=spec.text_field,
+                    filter=sub_flt),), vector=None))
+                continue
             sub_ef = spec.ef if spec.ef is not None else self._ef
             sub_w = (spec.expansion_width if spec.expansion_width is not None
                      else self._width)

@@ -224,11 +224,15 @@ class Search(Request):
 
       * legacy fields — `vector`/`k`/`filter` plus the per-request knobs
         (`ef`/`rescore`/`expansion_width`), which the server compiles to a
-        trivial single-stage plan;
+        trivial single-stage plan.  `text` (optionally `text_field`)
+        instead of / alongside `vector` asks for BM25 keyword search —
+        alone it compiles to a sparse plan, with a vector to a hybrid
+        RRF-fused plan, exactly like the fluent `Query.text()`;
       * `plan` — a full `plan_to_dict` tree (coarse-to-fine stages,
-        prefetch sub-plans, fusion), the wire form of the fluent `Query`.
-        When `plan` is set it is the whole query; the legacy fields are
-        ignored and the root vector rides inside the plan.
+        prefetch sub-plans incl. sparse legs, fusion), the wire form of
+        the fluent `Query`.  When `plan` is set it is the whole query; the
+        legacy fields are ignored and the root vector rides inside the
+        plan.
 
     `explain=True` asks the server to echo the compiled plan and per-stage
     candidate counts/timings alongside the hits.
@@ -244,6 +248,8 @@ class Search(Request):
     include_vector: bool = False
     plan: Optional[Dict[str, Any]] = None
     explain: bool = False
+    text: Optional[str] = None
+    text_field: Optional[str] = None
     op = "search"
 
     @property

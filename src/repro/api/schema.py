@@ -19,6 +19,7 @@ from ..core.engine import EngineConfig
 from ..core.hnsw_build import HNSWConfig
 from ..core.ivf import IVFConfig
 from ..core.pq import PQConfig
+from ..core.sparse import TokenizerConfig
 
 INDEXES = ("hnsw", "flat", "ivf")
 QUANTIZATIONS = ("none", "pq", "bq")
@@ -96,14 +97,65 @@ class BoolField(MetadataField):
         return value
 
 
-_FIELD_KINDS = {"keyword": KeywordField, "numeric": NumericField,
-                "bool": BoolField}
+@dataclasses.dataclass(frozen=True)
+class TextField(MetadataField):
+    """Full-text attribute: tokenized at upsert time into the collection's
+    BM25 `SparseIndex`, queried via `Query.text(...)` / `SparseStage`.
 
-# ops a filter may apply per field kind
+    The tokenization rules are part of the schema (serialized and
+    round-tripped through the checkpoint manifest) so documents and
+    queries always tokenize identically.  `stopwords=None` selects the
+    default English list; an empty tuple disables stopword removal.
+    Text fields are retrieval-only: they accept no filter predicates.
+    """
+
+    lowercase: bool = True
+    min_token_len: int = 2
+    stopwords: Optional[Tuple[str, ...]] = None
+    kind = "text"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not isinstance(self.min_token_len, int) or self.min_token_len < 1:
+            raise SchemaError(f"field {self.name!r}: min_token_len must be "
+                              f"a positive int, got {self.min_token_len!r}")
+        if self.stopwords is not None:
+            words = tuple(self.stopwords)
+            if not all(isinstance(w, str) for w in words):
+                raise SchemaError(
+                    f"field {self.name!r}: stopwords must be strings")
+            object.__setattr__(self, "stopwords", words)
+
+    def validate(self, value: Any) -> str:
+        if not isinstance(value, str):
+            raise SchemaError(
+                f"field {self.name!r} expects str, got {type(value).__name__}")
+        return value
+
+    def tokenizer(self) -> TokenizerConfig:
+        return TokenizerConfig(lowercase=self.lowercase,
+                               min_token_len=self.min_token_len,
+                               stopwords=self.stopwords)
+
+    def to_dict(self) -> Dict[str, Any]:
+        out = super().to_dict()
+        out.update({"lowercase": self.lowercase,
+                    "min_token_len": self.min_token_len,
+                    "stopwords": (list(self.stopwords)
+                                  if self.stopwords is not None else None)})
+        return out
+
+
+_FIELD_KINDS = {"keyword": KeywordField, "numeric": NumericField,
+                "bool": BoolField, "text": TextField}
+
+# ops a filter may apply per field kind ("text" is retrieval-only: it has
+# no predicate ops, so filters on it fail fast with a clear message)
 FIELD_OPS = {
     "keyword": ("eq", "ne", "in"),
     "numeric": ("eq", "ne", "lt", "le", "gt", "ge", "in"),
     "bool": ("eq", "ne"),
+    "text": (),
 }
 
 
@@ -111,8 +163,14 @@ def field_from_dict(d: Dict[str, Any]) -> MetadataField:
     kind = d.get("kind")
     if kind not in _FIELD_KINDS:
         raise SchemaError(f"unknown field kind {kind!r}")
-    return _FIELD_KINDS[kind](name=d["name"],
-                              required=bool(d.get("required", False)))
+    kw = {k: v for k, v in d.items() if k != "kind"}
+    if kind == "text" and kw.get("stopwords") is not None:
+        kw["stopwords"] = tuple(kw["stopwords"])
+    kw["required"] = bool(kw.get("required", False))
+    try:
+        return _FIELD_KINDS[kind](**kw)
+    except TypeError as exc:
+        raise SchemaError(f"bad {kind!r} field definition: {exc}")
 
 
 # --------------------------------------------------------------- vector field
@@ -232,6 +290,29 @@ class CollectionSchema:
 
     def field_names(self) -> Tuple[str, ...]:
         return tuple(f.name for f in self.fields)
+
+    def text_fields(self) -> Tuple["TextField", ...]:
+        return tuple(f for f in self.fields if f.kind == "text")
+
+    def resolve_text_field(self, name: Optional[str]) -> "TextField":
+        """The text field a sparse query targets; `None` picks the
+        collection's single text field (ambiguity is an error)."""
+        text = self.text_fields()
+        if name is None:
+            if len(text) == 1:
+                return text[0]
+            if not text:
+                raise SchemaError(
+                    f"collection {self.name!r} has no text fields; add a "
+                    f"TextField to the schema to use sparse/text search")
+            raise SchemaError(
+                f"collection {self.name!r} has {len(text)} text fields "
+                f"({[f.name for f in text]}); specify field=")
+        fld = self.field(name)          # raises on unknown column
+        if fld.kind != "text":
+            raise SchemaError(f"field {name!r} is {fld.kind!r}, not a "
+                              f"text field")
+        return fld
 
     def validate_payload(self,
                          payload: Optional[Dict[str, Any]]) -> Dict[str, Any]:

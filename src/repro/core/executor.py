@@ -8,6 +8,9 @@ execution path for those plans against a `QuantixarEngine`:
   * ``ann``      — one index pass (HNSW/flat/IVF, sealed + delta segments,
                    masks, per-query ef/width/rescore knobs) producing a
                    candidate set;
+  * ``sparse``   — one BM25 pass over a text field's inverted index
+                   (`repro.core.sparse.SparseIndex`), producing negated-
+                   score candidates in the same lower-is-closer space;
   * ``rescore``  — exact float re-ranking of an oversampled candidate set
                    in the collection metric (the coarse-to-fine second
                    stage quantized collections are built around);
@@ -152,10 +155,15 @@ class PlanExecutor:
     """
 
     def __init__(self, search_fn: Callable[..., Tuple[np.ndarray, np.ndarray]],
-                 engine, mask: Optional[np.ndarray] = None):
+                 engine, mask: Optional[np.ndarray] = None,
+                 sparse_fn: Optional[Callable[
+                     ..., Tuple[np.ndarray, np.ndarray]]] = None):
         self._search = search_fn
         self._engine = engine
         self._mask = mask
+        # sparse_fn(field, text, k, flt=...) -> (1, k) negated-BM25
+        # candidates; None when the collection has no text fields
+        self._sparse = sparse_fn
 
     # ------------------------------------------------------------- execution
     def execute(self, plan, inherited: Optional[np.ndarray] = None,
@@ -185,6 +193,8 @@ class PlanExecutor:
             children: Optional[List[List[Dict[str, Any]]]] = None
             if stage.op == "ann":
                 cand = self._run_ann(stage, queries)
+            elif stage.op == "sparse":
+                cand = self._run_sparse(stage)
             elif stage.op == "rescore":
                 cand = self._run_rescore(stage, queries, cand)
             elif stage.op == "prefetch":
@@ -234,6 +244,16 @@ class PlanExecutor:
                                    rescore=stage.rescore)
         d, ids = self._search(queries, stage.k, flt=stage.filter,
                               params=params)
+        return np.asarray(d), np.asarray(ids)
+
+    def _run_sparse(self, stage):
+        if self._sparse is None:
+            # validate_plan rejects sparse stages against text-less
+            # schemas, so this only guards hand-built executors
+            raise ValueError("collection has no text fields; "
+                             "sparse stages cannot execute")
+        d, ids = self._sparse(stage.field, stage.text, stage.k,
+                              flt=stage.filter)
         return np.asarray(d), np.asarray(ids)
 
     def _run_rescore(self, stage, queries, cand):

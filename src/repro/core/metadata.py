@@ -97,6 +97,11 @@ class MetadataStore:
         including a column no record has ever written: it is all-missing,
         not an error (the schema layer has already vetted the name)."""
         if isinstance(flt, Predicate):
+            if flt.op == "in" and len(tuple(flt.value)) == 0:
+                # an empty value set matches nothing, by definition; don't
+                # hand np.isin an empty (dtype-less float64) array to
+                # compare against an object column
+                return np.zeros((self._n,), dtype=bool)
             if flt.column not in self._columns:
                 return np.zeros((self._n,), dtype=bool)
             col = self.column(flt.column)

@@ -22,6 +22,7 @@ Routes (all under /v1):
     POST   /v1/collections/{name}/points/delete {"ids": [...]}
     GET    /v1/collections/{name}/points/{id}
     POST   /v1/collections/{name}/search        {"vector", "k", "filter", ...}
+                                                or {"text", "text_field", ...}
                                                 or {"plan": {...}, "explain"}
     POST   /v1/collections/{name}/count         {"filter": {...}}
     GET    /v1/collections/{name}/count

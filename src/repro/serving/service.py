@@ -201,13 +201,19 @@ class QuantixarService:
                                    timeout=timeout, explain=req.explain)
             batched = plan.batched
         else:
-            if req.vector is None:
+            if req.vector is None and req.text is None:
                 raise rq.error_to_exception(rq.ErrorInfo(
                     rq.INVALID_ARGUMENT,
-                    "search needs either 'vector' or 'plan'"))
-            vector = np.asarray(req.vector, dtype=np.float32)
+                    "search needs either 'vector', 'text', or 'plan'"))
+            vector = None
+            if req.vector is not None:
+                vector = np.asarray(req.vector, dtype=np.float32)
             flt = rq.filter_from_dict(req.filter)
             query = col.query(vector).top_k(req.k)
+            if req.text is not None:
+                # keyword leg: alone -> pure sparse plan; with a vector ->
+                # hybrid RRF plan, same compile as the fluent Query.text()
+                query = query.text(req.text, field=req.text_field)
             if flt is not None:
                 query = query.filter(flt)
             if req.ef is not None:
@@ -222,7 +228,7 @@ class QuantixarService:
             # coalesce through the RequestBatcher, 2-D run as one batch
             out = (query.explain(timeout=timeout) if req.explain
                    else query.run(timeout=timeout))
-            batched = vector.ndim == 2
+            batched = vector is not None and vector.ndim == 2
         explain = None
         hits = out
         if req.explain:

@@ -17,7 +17,7 @@ import pytest
 
 from repro.api import (And, BatcherConfig, BoolField, Database, KeywordField,
                        Not, NumericField, Predicate, QuantixarClient,
-                       SchemaError, VectorField)
+                       SchemaError, TextField, VectorField)
 from repro.api import requests as rq
 from repro.api.collection import CollectionClosed, QueryRetriesExhausted
 from repro.data.synthetic import gaussian_mixture
@@ -707,3 +707,183 @@ class TestPlanCodec:
         from repro.api import plan_from_dict
         with pytest.raises(SchemaError):
             plan_from_dict(bad_plan)
+
+
+# ----------------------------------------------------------- hybrid / sparse
+_TEXTS = ["quick brown fox jumps high", "lazy dog sleeps all day",
+          "quick fox and quick hare race", "vector database systems scale",
+          "sparse retrieval uses bm25 scoring", "dense vectors meet keywords",
+          "fox dens and fox kits", "ranking quality over speed"]
+
+
+def _make_text(backend, corpus, name="textcol"):
+    col = backend.create_collection(
+        name=name, vector=VectorField(dim=DIM, index="flat"),
+        fields=(TextField("body"), KeywordField("category")))
+    n = len(_TEXTS)
+    col.upsert([f"doc-{i}" for i in range(n)], corpus[:n],
+               [{"body": t, "category": f"cat-{i % 2}"}
+                for i, t in enumerate(_TEXTS)])
+    return col
+
+
+class TestSparseBackendParity:
+    """Keyword and hybrid searches behave identically embedded and remote."""
+
+    def test_keyword_search(self, backend, corpus):
+        col = _make_text(backend, corpus)
+        hits = col.query().text("quick fox").top_k(3).run()
+        assert [h.id for h in hits] == ["doc-2", "doc-0", "doc-6"]
+        assert all(h.score < 0 for h in hits)     # negated BM25
+
+    def test_filtered_keyword_search(self, backend, corpus):
+        col = _make_text(backend, corpus)
+        hits = (col.query().text("quick fox")
+                .filter(category="cat-0").top_k(5).run())
+        assert hits and all(h.payload["category"] == "cat-0" for h in hits)
+
+    def test_hybrid_explain_structure(self, backend, corpus, queries):
+        col = _make_text(backend, corpus)
+        ex = col.query(queries[0]).text("quick fox").top_k(4).explain()
+        assert [s["stage"] for s in ex.stages] == ["prefetch", "fusion"]
+        children = ex.stages[0]["children"]
+        assert [c[0]["stage"] for c in children] == ["ann", "sparse"]
+        assert children[1][0]["candidates_out"] > 0
+        assert len(ex.hits) == 4
+
+    def test_sparse_stats(self, backend, corpus):
+        col = _make_text(backend, corpus)
+        stats = col.stats()
+        assert stats["sparse_fields"] == 1
+        assert stats["sparse_docs_indexed"] == len(_TEXTS)
+        assert stats["sparse_vocab"] > 0
+        assert stats["sparse_postings"] == stats["sparse_sealed_postings"] \
+            + stats["sparse_delta_postings"]
+
+
+class TestSparseWireParity:
+    """The SAME hybrid plan must return the same hits with the same explain
+    structure embedded and over the wire."""
+
+    def test_hybrid_hit_for_hit(self, client, corpus, queries):
+        remote = _make_text(client, corpus)
+        db = Database()
+        embedded = _make_text(db, corpus)
+        builders = [
+            lambda c, q: c.query().text("quick fox").top_k(3),
+            lambda c, q: (c.query().text("fox bm25")
+                          .filter(category="cat-0").top_k(4)),
+            lambda c, q: c.query(q).text("quick fox").top_k(4),
+            lambda c, q: (c.query(q).top_k(4)
+                          .prefetch(k=8)
+                          .prefetch(text="sparse bm25 scoring", k=8)
+                          .fuse("rrf")),
+        ]
+        for build in builders:
+            wire = build(remote, queries[0]).run()
+            local = build(embedded, queries[0]).run()
+            assert [(h.id, pytest.approx(h.score, rel=1e-5)) for h in wire] \
+                == [(h.id, h.score) for h in local]
+        we = remote.query(queries[0]).text("quick fox").top_k(3).explain()
+        le = embedded.query(queries[0]).text("quick fox").top_k(3).explain()
+        assert we.plan == le.plan
+        assert [h.id for h in we.hits] == [h.id for h in le.hits]
+        assert [(s["stage"], s["candidates_out"]) for s in we.stages] \
+            == [(s["stage"], s["candidates_out"]) for s in le.stages]
+        db.close()
+
+    def test_legacy_text_form(self, server, client, corpus):
+        _make_text(client, corpus)
+        status, env = TestStructuredErrors._raw(
+            server, "POST", "/v1/collections/textcol/search",
+            json.dumps({"text": "quick fox", "k": 3}))
+        assert status == 200
+        assert [h["id"] for h in env["result"]["hits"]] \
+            == ["doc-2", "doc-0", "doc-6"]
+        # neither vector nor text nor plan is INVALID_ARGUMENT
+        status, env = TestStructuredErrors._raw(
+            server, "POST", "/v1/collections/textcol/search", "{}")
+        assert status == 400
+        assert env["error"]["code"] == rq.INVALID_ARGUMENT
+        assert "'text'" in env["error"]["message"]
+
+    def test_sparse_stats_over_wire(self, client, corpus):
+        remote = _make_text(client, corpus)
+        stats = remote.stats()
+        assert stats["sparse_docs_indexed"] == len(_TEXTS)
+        assert stats["sparse_vocab"] > 0
+
+
+class TestSparsePlanCodec:
+    def test_sparse_stage_round_trip(self):
+        from repro.api import (FusionStage, PrefetchStage, QueryPlan,
+                               SparseStage, plan_from_dict, plan_to_dict)
+        plan = QueryPlan(k=3, vector=None, stages=(
+            SparseStage(text="quick fox", k=3, field="body",
+                        filter=Predicate("category", "eq", "cat-0")),))
+        d = plan_to_dict(plan)
+        assert plan_to_dict(plan_from_dict(json.loads(json.dumps(d)))) == d
+        # and inside a prefetch sub-plan next to a dense leg
+        vec = np.arange(DIM, dtype=np.float32)
+        hybrid = QueryPlan(k=4, vector=vec, stages=(
+            PrefetchStage(plans=(
+                QueryPlan(k=8, vector=None, stages=(
+                    SparseStage(text="quick fox", k=8),)),
+                QueryPlan(k=8, vector=None, stages=(
+                    __import__("repro.api", fromlist=["AnnStage"])
+                    .AnnStage(k=8),)),)),
+            FusionStage(k=4)))
+        d = plan_to_dict(hybrid)
+        assert plan_to_dict(plan_from_dict(json.loads(json.dumps(d)))) == d
+
+    @pytest.mark.parametrize("bad", [
+        {"k": 3, "stages": [{"op": "sparse", "k": 3}]},          # no text
+        {"k": 3, "stages": [{"op": "sparse", "k": 3, "text": ""}]},
+        {"k": 3, "stages": [{"op": "sparse", "k": 3, "text": "  "}]},
+        {"k": 3, "stages": [{"op": "sparse", "k": 0, "text": "x"}]},
+        {"k": 3, "stages": [{"op": "sparse", "k": -2, "text": "x"}]},
+        {"k": 3, "stages": [{"op": "sparse", "k": 3, "text": "x",
+                             "field": 7}]},                      # bad field
+    ])
+    def test_malformed_sparse_stages_raise_schema_error(self, bad):
+        from repro.api import plan_from_dict
+        with pytest.raises(SchemaError):
+            plan_from_dict(bad)
+
+    def test_sparse_validation_against_schema(self, corpus):
+        from repro.api import plan_from_dict
+        db = Database()
+        col = _make_text(db, corpus)
+        # unknown text field
+        plan = plan_from_dict({"k": 3, "stages": [
+            {"op": "sparse", "k": 3, "text": "x", "field": "nope"}]})
+        with pytest.raises(SchemaError):
+            col.execute_plan(plan)
+        # sparse stage not at position 0
+        plan = plan_from_dict({"k": 3, "vector": [0.0] * DIM, "stages": [
+            {"op": "ann", "k": 3},
+            {"op": "sparse", "k": 3, "text": "x"}]})
+        with pytest.raises(SchemaError):
+            col.execute_plan(plan)
+        # sparse against a text-less collection
+        plain = _make(db, corpus, n=20, name="plain")
+        plan = plan_from_dict({"k": 3, "stages": [
+            {"op": "sparse", "k": 3, "text": "x"}]})
+        with pytest.raises(SchemaError, match="no text fields"):
+            plain.execute_plan(plan)
+        db.close()
+
+    def test_malformed_text_stage_wire_error(self, server, client, corpus):
+        _make_text(client, corpus)
+        for plan in ({"k": 3, "stages": [{"op": "sparse", "k": 3,
+                                          "text": ""}]},
+                     {"k": 3, "stages": [{"op": "sparse", "k": 0,
+                                          "text": "x"}]},
+                     {"k": 3, "stages": [{"op": "sparse", "k": 3, "text": "x",
+                                          "field": "nope"}]}):
+            status, envelope = TestStructuredErrors._raw(
+                server, "POST", "/v1/collections/textcol/search",
+                json.dumps({"plan": plan}))
+            assert status == 400
+            assert envelope["error"]["code"] == rq.SCHEMA_ERROR
+            assert "Traceback" not in json.dumps(envelope)

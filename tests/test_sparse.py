@@ -1,0 +1,376 @@
+"""Sparse full-text retrieval: tokenizer, BM25 index, hybrid plans.
+
+The acceptance bar for the index is *exact* agreement with the brute-force
+reference — identical floats, identical deterministic tie-breaks — across
+every lifecycle event: initial build, post-build (delta) upserts, seal(),
+deletes via row masks, compact(), and a save()/load round-trip.
+"""
+
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.api import (CollectionSchema, Database, KeywordField, Predicate,
+                       SchemaError, TextField, VectorField)
+from repro.core.metadata import MetadataStore
+from repro.core.sparse import (SparseIndex, TokenizerConfig, bm25_reference,
+                               rank_scores)
+
+# small but repetitive vocabulary so documents share terms (df > 1) and
+# exact ties actually occur
+_WORDS = ["quick", "fox", "lazy", "dog", "vector", "index", "search",
+          "sparse", "dense", "query", "graph", "rank", "token", "fusion"]
+
+
+def _corpus(rng, n, empty_every=7):
+    texts = []
+    for i in range(n):
+        if empty_every and i % empty_every == 3:
+            texts.append(None)            # rows without text stay aligned
+            continue
+        words = rng.choice(_WORDS, size=rng.integers(3, 12))
+        texts.append(" ".join(words))
+    return texts
+
+
+def _assert_exact(index, texts, query, mask=None, k=10):
+    """Index search must equal brute-force reference *exactly*."""
+    ref = bm25_reference(texts, query, index.config)
+    if mask is not None:
+        ref = np.where(np.asarray(mask, bool)[:ref.shape[0]], ref, 0.0)
+    want_d, want_rows = rank_scores(ref, k)
+    got_d, got_rows = index.search(query, k, mask=mask)
+    np.testing.assert_array_equal(got_rows, want_rows)
+    np.testing.assert_array_equal(got_d, want_d)
+
+
+class TestTokenizer:
+    def test_deterministic_and_rules(self):
+        cfg = TokenizerConfig()
+        toks = cfg.tokenize("The Quick, quick brown FOX!")
+        assert toks == ["quick", "quick", "brown", "fox"]  # "the" stopped
+        assert cfg.tokenize("a I x") == []    # stopword / below min length
+        assert cfg.tokenize(None) == []
+
+    def test_query_tokens_dedupe_preserves_first_occurrence(self):
+        cfg = TokenizerConfig()
+        assert cfg.query_tokens("fox quick fox dog quick") == \
+            ["fox", "quick", "dog"]
+
+    def test_config_knobs(self):
+        cfg = TokenizerConfig(lowercase=False, min_token_len=1,
+                              stopwords=())
+        assert cfg.tokenize("The Fox a") == ["The", "Fox", "a"]
+
+
+class TestTextFieldSchema:
+    def test_round_trip_with_params(self):
+        schema = CollectionSchema(
+            name="c", vector=VectorField(dim=4, index="flat"),
+            fields=(TextField("body", min_token_len=3, lowercase=False,
+                              stopwords=("foo", "bar")),))
+        back = CollectionSchema.from_dict(schema.to_dict())
+        fld = back.field("body")
+        assert isinstance(fld, TextField)
+        assert fld.min_token_len == 3 and not fld.lowercase
+        assert fld.stopwords == ("foo", "bar")
+        assert fld.tokenizer() == schema.field("body").tokenizer()
+
+    def test_validation(self):
+        with pytest.raises(SchemaError):
+            TextField("body", min_token_len=0)
+        with pytest.raises(SchemaError):
+            TextField("body", stopwords=("ok", 3))
+        with pytest.raises(SchemaError):
+            TextField("body").validate(42)
+
+    def test_text_fields_are_retrieval_only(self):
+        schema = CollectionSchema(
+            name="c", vector=VectorField(dim=4, index="flat"),
+            fields=(TextField("body"),))
+        from repro.api.plan import validate_filter
+        with pytest.raises(SchemaError, match="not valid"):
+            validate_filter(schema, Predicate("body", "eq", "x"))
+
+    def test_resolve_text_field(self):
+        one = CollectionSchema(
+            name="c", vector=VectorField(dim=4, index="flat"),
+            fields=(TextField("body"), KeywordField("lang")))
+        assert one.resolve_text_field(None).name == "body"
+        with pytest.raises(SchemaError, match="not a"):
+            one.resolve_text_field("lang")
+        none = CollectionSchema(name="c",
+                                vector=VectorField(dim=4, index="flat"))
+        with pytest.raises(SchemaError, match="no text fields"):
+            none.resolve_text_field(None)
+        two = CollectionSchema(
+            name="c", vector=VectorField(dim=4, index="flat"),
+            fields=(TextField("t1"), TextField("t2")))
+        with pytest.raises(SchemaError, match="specify field="):
+            two.resolve_text_field(None)
+
+
+class TestSparseIndexExact:
+    """Index top-k == brute-force reference, float-for-float."""
+
+    def test_initial_build(self):
+        rng = np.random.default_rng(0)
+        texts = _corpus(rng, 60)
+        index = SparseIndex()
+        index.add(texts)
+        for q in ("quick fox", "vector index search", "fusion rank token",
+                  "quick quick dog", "missingword"):
+            _assert_exact(index, texts, q)
+
+    def test_after_delta_adds_and_seal(self):
+        rng = np.random.default_rng(1)
+        texts = _corpus(rng, 40)
+        index = SparseIndex()
+        index.add(texts[:25])
+        index.seal()
+        index.add(texts[25:])        # these live in the delta
+        assert index.delta_postings > 0 and index.sealed_postings > 0
+        _assert_exact(index, texts, "quick fox dense query")
+        index.seal()
+        assert index.delta_postings == 0
+        _assert_exact(index, texts, "quick fox dense query")
+
+    def test_mask_filters_candidates_not_statistics(self):
+        rng = np.random.default_rng(2)
+        texts = _corpus(rng, 50)
+        index = SparseIndex()
+        index.add(texts)
+        mask = rng.random(50) > 0.4
+        _assert_exact(index, texts, "quick fox vector", mask=mask)
+        d, rows = index.search("quick fox vector", 50, mask=mask)
+        assert all(mask[r] for r in rows if r >= 0)
+
+    def test_auto_seal(self):
+        index = SparseIndex()
+        index.AUTO_SEAL_POSTINGS = 30
+        rng = np.random.default_rng(3)
+        texts = _corpus(rng, 40, empty_every=0)
+        index.add(texts)
+        assert index.seals >= 1
+        _assert_exact(index, texts, "quick fox token")
+
+    def test_state_dict_round_trip_preserves_delta_split(self):
+        rng = np.random.default_rng(4)
+        texts = _corpus(rng, 30)
+        index = SparseIndex()
+        index.add(texts[:20])
+        index.seal()
+        index.add(texts[20:])
+        loaded = SparseIndex.from_state_dict(index.state_dict())
+        assert loaded.sealed_postings == index.sealed_postings
+        assert loaded.delta_postings == index.delta_postings
+        _assert_exact(loaded, texts, "quick fox search")
+        # the loaded index keeps absorbing upserts without a rebuild
+        more = _corpus(rng, 10)
+        index.add(more)
+        loaded.add(more)
+        _assert_exact(loaded, texts + more, "dense sparse rank")
+
+    def test_jax_path_matches_numpy_approximately(self):
+        rng = np.random.default_rng(5)
+        texts = _corpus(rng, 80)
+        index = SparseIndex()
+        index.add(texts)
+        toks = index.config.query_tokens("quick fox vector fusion")
+        np.testing.assert_allclose(index.scores_jax(toks),
+                                   index.scores(toks), rtol=1e-5, atol=1e-6)
+
+    def test_tie_break_is_ascending_row_id(self):
+        index = SparseIndex()
+        index.add(["quick fox", "other words here", "quick fox"])
+        d, rows = index.search("quick fox", 3)
+        assert rows.tolist()[:2] == [0, 2]     # identical scores: row order
+        assert d[0] == d[1]
+
+
+class TestMetadataInOp:
+    """Satellite: `in` with an empty value set / never-written columns."""
+
+    def test_empty_in_matches_nothing(self):
+        ms = MetadataStore()
+        ms.append_batch([{"tag": "a"}, {"tag": "b"}, None])
+        mask = ms.evaluate(Predicate("tag", "in", ()))
+        assert mask.dtype == np.bool_ and mask.shape == (3,)
+        assert not mask.any()
+
+    def test_empty_in_on_empty_store(self):
+        ms = MetadataStore()
+        mask = ms.evaluate(Predicate("tag", "in", ()))
+        assert mask.dtype == np.bool_ and mask.shape == (0,)
+
+    def test_in_on_never_written_column(self):
+        ms = MetadataStore()
+        ms.append_batch([{"tag": "a"}, {"tag": "b"}])
+        mask = ms.evaluate(Predicate("ghost", "in", ("a", "b")))
+        assert mask.dtype == np.bool_ and not mask.any()
+        mask = ms.evaluate(Predicate("ghost", "in", ()))
+        assert mask.dtype == np.bool_ and not mask.any()
+
+    def test_empty_in_through_collection(self):
+        db = Database()
+        col = db.create_collection(CollectionSchema(
+            name="c", vector=VectorField(dim=4, index="flat"),
+            fields=(KeywordField("tag"),)))
+        col.upsert(["a", "b"], np.eye(4, dtype=np.float32)[:2],
+                   [{"tag": "x"}, {"tag": "y"}])
+        assert col.count(Predicate("tag", "in", ())) == 0
+        hits = (col.query(np.ones(4, np.float32))
+                .filter(Predicate("tag", "in", ())).run())
+        assert hits == []
+
+
+@pytest.fixture
+def hybrid_col():
+    rng = np.random.default_rng(7)
+    db = Database()
+    col = db.create_collection(CollectionSchema(
+        name="docs", vector=VectorField(dim=8, metric="cosine", index="flat"),
+        fields=(TextField("body"), KeywordField("lang"))))
+    texts = _corpus(rng, 40)
+    vecs = rng.normal(size=(40, 8)).astype(np.float32)
+    payloads = []
+    for i, t in enumerate(texts):
+        p = {"lang": "en" if i % 2 == 0 else "de"}
+        if t is not None:
+            p["body"] = t
+        payloads.append(p)
+    col.upsert([f"d{i}" for i in range(40)], vecs, payloads)
+    return col, texts, vecs, rng
+
+
+class TestCollectionSparse:
+    def _texts_live(self, texts, col):
+        live = {col._ids[r] for r in col._row_of.values()}
+        return [t if f"d{i}" in live else None
+                for i, t in enumerate(texts)]
+
+    def test_keyword_search_matches_reference(self, hybrid_col):
+        col, texts, _, _ = hybrid_col
+        hits = col.query().text("quick fox vector").top_k(5).run()
+        ref = bm25_reference(texts, "quick fox vector")
+        d, rows = rank_scores(ref, 5)
+        want = [f"d{r}" for r in rows if r >= 0]
+        assert [h.id for h in hits] == want
+        np.testing.assert_array_equal(
+            np.asarray([h.score for h in hits], dtype=np.float32),
+            d[: len(hits)])
+
+    def test_filtered_keyword_search(self, hybrid_col):
+        col, texts, _, _ = hybrid_col
+        hits = (col.query().text("quick fox vector")
+                .filter(lang="en").top_k(10).run())
+        assert hits and all(h.payload["lang"] == "en" for h in hits)
+
+    def test_exact_after_upsert_delete_compact_save(self, hybrid_col):
+        col, texts, vecs, rng = hybrid_col
+        db = Database()
+        db._collections[col.name] = col    # wrap for save()
+
+        def check(q="quick fox dense rank"):
+            ref = bm25_reference(self._texts_live(texts, col), q)
+            want_d, want_rows = rank_scores(ref, 8)
+            want = [(f"d{r}", float(np.float32(d)))
+                    for d, r in zip(want_d, want_rows) if r >= 0]
+            hits = col.query().text(q).top_k(8).run()
+            assert [(h.id, h.score) for h in hits] == want
+
+        check()
+        # replace one doc and add a new one (delta path)
+        texts[2] = "quick quick quick fox"
+        texts.append("fresh dense vector rank")
+        col.upsert(["d2", "d40"],
+                   rng.normal(size=(2, 8)).astype(np.float32),
+                   [{"body": texts[2], "lang": "en"},
+                    {"body": texts[40], "lang": "de"}])
+        # the replaced d2 row is a tombstone; reference corpus must model
+        # the live view: old row text gone, new rows appended
+        texts_now = [t for t in texts]
+
+        def check_live(q="quick fox dense rank"):
+            # tombstoned rows stay in the corpus statistics (N, df, avgdl)
+            # and are filtered out as *candidates* via the liveness mask —
+            # the same convention SparseIndex.search documents
+            all_texts = [col._engine.metadata.record(row).get("body")
+                         for row in range(len(col._ids))]
+            ref = bm25_reference(all_texts, q)
+            ref = np.where(np.asarray(col._live, bool), ref, 0.0)
+            want_d, want_rows = rank_scores(ref, 8)
+            want = [(col._ids[r], float(np.float32(d)))
+                    for d, r in zip(want_d, want_rows) if r >= 0]
+            hits = col.query().text(q).top_k(8).run()
+            assert [(h.id, h.score) for h in hits] == want
+
+        check_live()
+        col.delete(["d0", "d5", "d11"])
+        check_live()
+        col.compact()
+        check_live()
+        col.query()  # still builds
+        with tempfile.TemporaryDirectory() as tmp:
+            db.save(tmp)
+            col2 = Database.load(tmp).collection("docs")
+            h1 = col.query().text("quick fox dense rank").top_k(8).run()
+            h2 = col2.query().text("quick fox dense rank").top_k(8).run()
+            assert [(h.id, h.score) for h in h1] == \
+                [(h.id, h.score) for h in h2]
+        assert texts_now  # silence unused warning
+
+    def test_hybrid_fuses_dense_and_sparse(self, hybrid_col):
+        col, texts, vecs, _ = hybrid_col
+        ex = col.query(vecs[0]).text("quick fox").top_k(5).explain()
+        ops = [s["stage"] for s in ex.stages]
+        assert ops == ["prefetch", "fusion"]
+        children = ex.stages[0]["children"]
+        assert [c[0]["stage"] for c in children] == ["ann", "sparse"]
+        assert ex.stages[0]["candidates_out"] > 0
+        assert len(ex.hits) == 5
+        # plan echo carries the sparse leg with the resolved field
+        sub_ops = [p["stages"][0]["op"]
+                   for p in ex.plan["stages"][0]["plans"]]
+        assert sub_ops == ["ann", "sparse"]
+        assert ex.plan["stages"][0]["plans"][1]["stages"][0]["field"] \
+            == "body"
+
+    def test_hybrid_with_explicit_prefetch_and_linear_fusion(
+            self, hybrid_col):
+        col, _, vecs, _ = hybrid_col
+        hits = (col.query(vecs[1])
+                .prefetch(k=12, filter=Predicate("lang", "eq", "en"))
+                .prefetch(text="quick fox", k=12)
+                .fuse("linear", weights=(0.5, 0.5))
+                .top_k(5).run())
+        assert len(hits) == 5
+
+    def test_vectorless_errors(self, hybrid_col):
+        col, _, _, _ = hybrid_col
+        with pytest.raises(SchemaError, match="vector or text"):
+            col.query().top_k(3).run()
+        with pytest.raises(SchemaError, match="needs a query vector"):
+            col.query().text("quick").stages(coarse_k=10).run()
+        with pytest.raises(SchemaError, match="fuse"):
+            col.query().text("quick").fuse("rrf").run()
+        with pytest.raises(SchemaError):
+            col.query().text("")
+        with pytest.raises(SchemaError, match="dense or sparse"):
+            col.query(np.ones(8, np.float32)).prefetch(
+                vector=np.ones(8, np.float32), text="quick")
+
+    def test_stats_counters(self, hybrid_col):
+        col, texts, _, _ = hybrid_col
+        stats = col.stats()
+        n_text = sum(1 for t in texts if t)
+        assert stats["sparse_fields"] == 1
+        assert stats["sparse_docs_indexed"] == n_text
+        assert stats["sparse_vocab"] > 0
+        assert stats["sparse_postings"] == \
+            stats["sparse_sealed_postings"] + stats["sparse_delta_postings"]
+        col.compact()   # no tombstones: seals the sparse delta too
+        stats = col.stats()
+        assert stats["sparse_delta_postings"] == 0
+        assert stats["sparse_seals"] >= 1
