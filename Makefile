@@ -2,11 +2,34 @@
 
 PY ?= python
 
-.PHONY: test smoke serve-smoke serve bench bench-smoke bench-serve \
-	bench-query bench-query-smoke bench-hybrid bench-hybrid-smoke ci
+.PHONY: test lint qlint fuzz-smoke smoke serve-smoke serve bench \
+	bench-smoke bench-serve bench-query bench-query-smoke \
+	bench-hybrid bench-hybrid-smoke ci
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# Static analysis: the repo-custom qlint analyzers always run (stdlib-only);
+# ruff and mypy run when installed (CI installs them via requirements-dev)
+# and are skipped with a notice otherwise, so `make lint` works in minimal
+# containers too.
+lint: qlint
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tools tests benchmarks; \
+	else echo "lint: ruff not installed, skipping (pip install -r requirements-dev.txt)"; fi
+	@if command -v mypy >/dev/null 2>&1; then \
+		mypy src/repro/api/requests.py src/repro/api/plan.py \
+			src/repro/api/schema.py; \
+	else echo "lint: mypy not installed, skipping (pip install -r requirements-dev.txt)"; fi
+
+# lock discipline + wire-protocol exhaustiveness + jax/pallas hygiene
+qlint:
+	PYTHONPATH=src:. $(PY) -m tools.qlint
+
+# thread-fuzz stress test under instrumented (deadlock-detecting) locks;
+# bounded so a real deadlock fails the run instead of wedging it
+fuzz-smoke:
+	PYTHONPATH=src:. $(PY) -m pytest tests/test_fuzz_concurrency.py -x -q
 
 # full HNSW width x ef sweep -> BENCH_hnsw.json at the repo root
 # (timestamp passed in at the make boundary, not sampled by the writer)
@@ -56,4 +79,4 @@ bench-hybrid-smoke:
 		--n 2000 --dim 32 --queries 24 --index flat --min-recall 0.6 \
 		--out BENCH_hybrid.json --timestamp $$(date +%s)
 
-ci: test smoke serve-smoke
+ci: lint test smoke serve-smoke

@@ -70,18 +70,21 @@ def _as_id_list(ids: Union[str, Sequence[str]]) -> List[str]:
 class Collection:
     def __init__(self, schema: CollectionSchema):
         self.schema = schema
-        self._engine = QuantixarEngine(schema.vector.to_engine_config())
+        self._engine = QuantixarEngine(     # guarded-by: _lock
+            schema.vector.to_engine_config())
         # one BM25 inverted index per TextField, row-aligned with the engine
-        self._sparse = {f.name: SparseIndex(f.tokenizer())
+        self._sparse = {f.name: SparseIndex(f.tokenizer())  # guarded-by: _lock
                         for f in schema.text_fields()}
-        self._ids: List[str] = []        # row -> string id (dead rows too)
-        self._live: List[bool] = []      # row -> liveness (False = tombstone)
-        self._row_of: Dict[str, int] = {}   # live id -> row
-        self._batcher: Optional[RequestBatcher] = None
+        self._ids: List[str] = []        # guarded-by: _lock (row -> id)
+        self._live: List[bool] = []      # guarded-by: _lock (row liveness)
+        self._row_of: Dict[str, int] = {}   # guarded-by: _lock (live id->row)
+        self._batcher: Optional[RequestBatcher] = None  # guarded-by: _batcher_init_lock
         self._batcher_init_lock = threading.Lock()
-        self._closed = False
-        self._mask: Optional[np.ndarray] = None   # cached liveness mask
-        self._epoch = 0        # bumped by compact(): row numbers change
+        # close() holds BOTH locks while flipping this, so a reader under
+        # either lock observes the final value
+        self._closed = False    # guarded-by: _lock|_batcher_init_lock
+        self._mask: Optional[np.ndarray] = None   # guarded-by: _lock
+        self._epoch = 0        # guarded-by: _lock (compact renumbers rows)
         # one engine is shared between caller threads (2-D queries, writes)
         # and the batcher worker (1-D queries); its lazy rebuild and chunk
         # concatenation are not thread-safe, so serialize around it
@@ -94,19 +97,23 @@ class Collection:
 
     def __len__(self) -> int:
         """Number of live entities."""
-        return len(self._row_of)
+        with self._lock:
+            return len(self._row_of)
 
     @property
     def tombstones(self) -> int:
         """Dead rows still occupying the index (reclaim via `compact()`)."""
-        return len(self._ids) - len(self._row_of)
+        with self._lock:
+            return len(self._ids) - len(self._row_of)
 
     def __contains__(self, id: str) -> bool:
-        return id in self._row_of
+        with self._lock:
+            return id in self._row_of
 
     def ids(self) -> List[str]:
         """Live ids in insertion order."""
-        return [i for i, alive in zip(self._ids, self._live) if alive]
+        with self._lock:
+            return [i for i, alive in zip(self._ids, self._live) if alive]
 
     # ---------------------------------------------------------------- writes
     def upsert(self, ids: Union[str, Sequence[str]],
@@ -280,7 +287,7 @@ class Collection:
             return d, ids
 
     # ------------------------------------------------------------- internals
-    def _live_mask(self) -> Optional[np.ndarray]:
+    def _live_mask(self) -> Optional[np.ndarray]:  # requires-lock: _lock
         if self.tombstones == 0:
             return None
         if self._mask is None:        # invalidated by every write
@@ -324,7 +331,7 @@ class Collection:
             d, rows = index.search(text, k, mask=mask)
             return d[None, :], rows[None, :]
 
-    def _execute_direct(self, plan: QueryPlan,
+    def _execute_direct(self, plan: QueryPlan,  # requires-lock: _lock
                         deadline: Optional[float] = None) -> ExecResult:
         """Run a plan through the staged executor (caller holds the lock)."""
         if self._closed:
@@ -353,7 +360,10 @@ class Collection:
         counters and requests vanish — but the hot path stays lock-free so
         submits keep enqueueing while the worker (which takes the collection
         lock to search) is mid-batch."""
-        batcher = self._batcher
+        # _batcher only ever goes None -> instance (close() nulls it, but
+        # post-close submits fail typed anyway), so a stale fast-path read
+        # just falls through to the locked slow path
+        batcher = self._batcher  # unguarded-ok: lock-free fast path, re-checked under init lock
         if batcher is None:
             with self._batcher_init_lock:
                 if self._closed:     # don't resurrect past close()/drop —
@@ -409,7 +419,7 @@ class Collection:
                                        expansion_width=stage.expansion_width,
                                        rescore=stage.rescore)
             for _ in range(5):
-                epoch = self._epoch
+                epoch = self._epoch  # unguarded-ok: optimistic read, re-validated under _lock below
                 fut = self.batcher.submit(vec, plan.k, flt=stage.filter,
                                           params=params)
                 d, rows = fut.result(timeout=timeout)
@@ -434,26 +444,34 @@ class Collection:
         return hits
 
     def close(self) -> None:
-        with self._batcher_init_lock:
-            self._closed = True
-            batcher, self._batcher = self._batcher, None
+        # lock order: _lock, then _batcher_init_lock (the traced-lock fuzz
+        # harness checks this graph stays acyclic; no path acquires them in
+        # the reverse order while holding the first).  Holding both means
+        # direct-path queries (under _lock) and batcher resurrection (under
+        # _batcher_init_lock) each see _closed flip atomically.
+        with self._lock:
+            with self._batcher_init_lock:
+                self._closed = True
+                batcher, self._batcher = self._batcher, None
+        # join the worker outside both locks: it takes _lock to search
         if batcher is not None:
             batcher.close()
 
     def stats(self) -> Dict[str, Any]:
-        out = self._engine.stats()
-        out.update({"name": self.name, "live": len(self),
-                    "tombstones": self.tombstones})
+        with self._lock:
+            out = self._engine.stats()
+            out.update({"name": self.name, "live": len(self),
+                        "tombstones": self.tombstones})
+            sparse_agg = [idx.stats() for idx in self._sparse.values()]
         # serving counters: all-zero until the batcher path first runs.
         # snapshot the attribute — a concurrent close() may null it between
         # the check and the call
-        batcher = self._batcher
+        batcher = self._batcher  # unguarded-ok: atomic snapshot; batcher.stats() is safe post-close
         serving = (batcher.stats() if batcher is not None
                    else RequestBatcher.zero_stats())
         out.update({f"serving_{k}": v for k, v in serving.items()})
-        if self._sparse:
-            with self._lock:
-                agg = [idx.stats() for idx in self._sparse.values()]
+        if sparse_agg:
+            agg = sparse_agg
             out.update({
                 "sparse_fields": len(agg),
                 "sparse_docs_indexed": sum(s["docs_indexed"] for s in agg),

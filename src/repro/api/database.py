@@ -16,7 +16,7 @@ process — so scenarios move between the two backends without rewrites.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Union
+from typing import Any, Dict, List, Optional, Sequence
 
 from ..checkpoint.store import CheckpointStore
 from .collection import Collection

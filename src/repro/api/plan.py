@@ -103,7 +103,7 @@ class SparseStage:
     filter: Optional[Filter] = None
     op = "sparse"
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if not isinstance(self.text, str) or not self.text.strip():
             raise SchemaError(
                 f"sparse stage: 'text' must be a non-empty string, "
@@ -136,7 +136,7 @@ class FusionStage:
     rrf_k: int = 60
     op = "fusion"
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.method not in FUSION_METHODS:
             raise SchemaError(f"fusion method {self.method!r}; "
                               f"have {FUSION_METHODS}")
@@ -448,7 +448,7 @@ class PlanExplain:
     def to_dict(self) -> Dict[str, Any]:
         return {"plan": self.plan, "stages": self.stages}
 
-    def __repr__(self):
+    def __repr__(self) -> str:
         parts = ", ".join(
             f"{s['stage']}(k={s['k']}, out={s['candidates_out']}, "
             f"{s['seconds'] * 1e3:.2f}ms)" for s in self.stages)
@@ -456,7 +456,7 @@ class PlanExplain:
 
 
 # ----------------------------------------------------------------- recommend
-def recommend_vector(collection, positives: Sequence[Any],
+def recommend_vector(collection: Any, positives: Sequence[Any],
                      negatives: Sequence[Any] = ()) -> np.ndarray:
     """Synthesize a query vector from example entities: mean(positives)
     minus mean(negatives).  Examples may be stored entity ids (looked up

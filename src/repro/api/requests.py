@@ -42,7 +42,7 @@ class ErrorInfo:
     message: str
     details: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.code not in ERROR_CODES:
             self.code = INTERNAL
 
@@ -62,7 +62,7 @@ class ErrorInfo:
 class ApiError(Exception):
     """Carrier for an `ErrorInfo` across the client/service boundary."""
 
-    def __init__(self, info: ErrorInfo):
+    def __init__(self, info: ErrorInfo) -> None:
         super().__init__(f"[{info.code}] {info.message}")
         self.info = info
 
@@ -157,7 +157,7 @@ class Request:
 
     op = "abstract"
 
-    def __init_subclass__(cls, **kw):
+    def __init_subclass__(cls, **kw: Any) -> None:
         super().__init_subclass__(**kw)
         if cls.op != "abstract":
             _REQUEST_TYPES[cls.op] = cls

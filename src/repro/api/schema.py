@@ -11,7 +11,7 @@ the checkpoint manifest.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 from ..core.bq import BQConfig
 from ..core.distances import available_metrics
@@ -41,7 +41,7 @@ class MetadataField:
     required: bool = False
     kind = "abstract"
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if not self.name or not isinstance(self.name, str):
             raise SchemaError(f"field name must be a non-empty str, "
                               f"got {self.name!r}")
@@ -114,7 +114,7 @@ class TextField(MetadataField):
     stopwords: Optional[Tuple[str, ...]] = None
     kind = "text"
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         super().__post_init__()
         if not isinstance(self.min_token_len, int) or self.min_token_len < 1:
             raise SchemaError(f"field {self.name!r}: min_token_len must be "
@@ -191,7 +191,7 @@ class VectorField:
     rescore_multiplier: int = 4
     builder: str = "bulk"          # API default: fast bulk HNSW construction
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if not isinstance(self.dim, int) or self.dim <= 0:
             raise SchemaError(f"dim must be a positive int, got {self.dim!r}")
         if self.metric not in available_metrics():
@@ -242,7 +242,7 @@ class BatcherConfig:
     max_batch: int = 32
     max_wait_ms: float = 2.0
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if not isinstance(self.max_batch, int) or self.max_batch < 1:
             raise SchemaError(
                 f"batcher max_batch must be a positive int, "
@@ -270,7 +270,7 @@ class CollectionSchema:
     # an explicit BatcherConfig always wins over both
     batcher: Optional[BatcherConfig] = None
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if not self.name or not isinstance(self.name, str):
             raise SchemaError("collection name must be a non-empty str")
         if "/" in self.name:

@@ -89,7 +89,10 @@ class CheckpointStore:
         os.makedirs(root, exist_ok=True)
         os.makedirs(self.wal_dir, exist_ok=True)
         self._lock = threading.Lock()
-        self._async_threads: List[threading.Thread] = []
+        # separate lock: _lock is held for a whole commit's IO, and
+        # save_async must stay non-blocking while a commit is in flight
+        self._threads_lock = threading.Lock()
+        self._async_threads: List[threading.Thread] = []  # guarded-by: _threads_lock
 
     # ------------------------------------------------------------ layout
     @property
@@ -167,13 +170,18 @@ class CheckpointStore:
         t = threading.Thread(target=self.save, args=(snapshot,), kwargs=kw,
                              daemon=True)
         t.start()
-        self._async_threads.append(t)
+        with self._threads_lock:
+            self._async_threads.append(t)
         return t
 
     def wait_async(self) -> None:
-        for t in self._async_threads:
+        # snapshot under the lock, join OUTSIDE it: the background save()
+        # acquires the commit lock, and holding any store lock across a
+        # join invites an order cycle with it
+        with self._threads_lock:
+            threads, self._async_threads = self._async_threads, []
+        for t in threads:
             t.join()
-        self._async_threads.clear()
 
     def _gc(self) -> None:
         gens = self.generations()

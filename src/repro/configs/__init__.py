@@ -8,7 +8,7 @@ config for CPU tests) plus input_specs helpers via repro.launch.specs.
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 _ARCHS = {
     "qwen2-1.5b": "qwen2_1_5b",

@@ -19,7 +19,7 @@ All generators are deterministic in (seed, shape).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Tuple
 
 import numpy as np
 

@@ -10,7 +10,7 @@ logic so it works on abstract (ShapeDtypeStruct) trees — the dry-run path.
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -4,8 +4,8 @@ sequence kernel motivated by the §Perf roofline work."""
 
 from .ops import (beam_gather_adc, beam_gather_distances,
                   beam_gather_hamming, dot_distances, hamming_distances,
-                  l2_distances, pq_adc_distances)
+                  l2_distances, pq_adc_distances, slstm_sequence)
 
 __all__ = ["beam_gather_adc", "beam_gather_distances", "beam_gather_hamming",
            "dot_distances", "hamming_distances", "l2_distances",
-           "pq_adc_distances"]
+           "pq_adc_distances", "slstm_sequence"]

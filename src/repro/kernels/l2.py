@@ -18,7 +18,6 @@ VMEM budget per grid cell (defaults TQ=TN=256, TK=512, fp32):
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,6 +21,7 @@ from .beam_gather import (beam_gather_adc_kernel, beam_gather_hamming_kernel,
 from .hamming import hamming_kernel
 from .l2 import l2_distance_kernel
 from .pq_adc import pq_adc_kernel
+from .slstm import DEFAULT_CHUNK, slstm_sequence_kernel
 
 Array = jax.Array
 
@@ -102,3 +103,17 @@ def beam_gather_hamming(q_code: Array, ids: Array, codes: Array, *,
         return ref.beam_gather_hamming_ref(q_code, ids, codes)
     return beam_gather_hamming_kernel(q_code, ids, codes,
                                       interpret=_interpret(), **tiles)
+
+
+# --------------------------------------------------------- sLSTM sequence
+# Fused weight-resident sLSTM (models/recurrent.py learned-metric scorer);
+# same ref/kernel dispatch contract as the distance kernels above.
+
+def slstm_sequence(gates_x: Array, r: Array, b: Array, *, n_heads: int,
+                   chunk: int = DEFAULT_CHUNK,
+                   force_ref: Optional[bool] = None) -> Array:
+    """gates_x (B, S, 4d) × r (4, H, blk, blk) × b (4d,) -> h (B, S, d)."""
+    if _use_ref(force_ref):
+        return ref.slstm_sequence_ref(gates_x, r, b, n_heads=n_heads)
+    return slstm_sequence_kernel(gates_x, r, b, n_heads=n_heads,
+                                 chunk=chunk, interpret=_interpret())

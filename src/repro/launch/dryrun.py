@@ -20,7 +20,6 @@ import time          # noqa: E402
 import traceback     # noqa: E402
 
 import jax           # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import arch_ids, get_config  # noqa: E402
 from repro.configs.quantixar_db import CONFIG as DB_CONFIG  # noqa: E402

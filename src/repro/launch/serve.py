@@ -23,8 +23,6 @@ import sys
 import threading
 import time
 
-import numpy as np
-
 from ..api import (BatcherConfig, Database, KeywordField, QuantixarClient,
                    VectorField)
 from ..core.hnsw_build import HNSWConfig, exact_knn

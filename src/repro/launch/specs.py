@@ -15,7 +15,7 @@ No array is ever allocated here — everything is jax.ShapeDtypeStruct
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -32,7 +32,7 @@ from ..models import (TrainState, abstract_train_state, init_train_state,
 from ..models.config import ModelConfig
 from ..optim import AdamWConfig, adamw
 from ..optim.compression import compress_decompress, init_error_feedback
-from .mesh import batch_axes, make_local_mesh, make_production_mesh
+from .mesh import batch_axes, make_local_mesh
 
 
 def _flatten_state(state: TrainState) -> dict:

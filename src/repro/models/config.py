@@ -19,7 +19,7 @@ pattern units (HLO stays small, compile stays fast — DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

@@ -7,8 +7,6 @@ norms/softmax/logits accumulate fp32 — the production mixed-precision recipe.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -7,7 +7,6 @@ scan, not n_layers inlined bodies) and remat-bounded activation memory.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -7,7 +7,6 @@ decode step over a KV/recurrent-state cache.  Both are pure functions of
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Tuple
 
 import jax

@@ -80,13 +80,13 @@ class RequestBatcher:
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self._q: "queue.Queue[Optional[Request]]" = queue.Queue()
-        self._carry: Optional[Request] = None   # head of the next batch
+        self._carry: Optional[Request] = None   # guarded-by: _state_lock
         self._thread = threading.Thread(target=self._loop, daemon=True)
-        self._running = True
-        self._state_lock = threading.Lock()   # serializes submit vs close
-        self.batches_served = 0
-        self.requests_served = 0
-        self.carried_requests = 0   # extras-incompatible heads deferred once
+        self._running = True                    # guarded-by: _state_lock
+        self._state_lock = threading.Lock()   # serializes submit/close/worker
+        self.batches_served = 0      # guarded-by: _state_lock
+        self.requests_served = 0     # guarded-by: _state_lock
+        self.carried_requests = 0    # guarded-by: _state_lock
         self._thread.start()
 
     def submit(self, query: np.ndarray, k: int, **extras: Any) -> Future:
@@ -113,10 +113,11 @@ class RequestBatcher:
 
     def stats(self) -> Dict[str, int]:
         """Serving observability counters (`/stats` endpoint feed)."""
-        return {"batches_served": self.batches_served,
-                "requests_served": self.requests_served,
-                "carried_requests": self.carried_requests,
-                "queue_depth": self._q.qsize()}
+        with self._state_lock:
+            return {"batches_served": self.batches_served,
+                    "requests_served": self.requests_served,
+                    "carried_requests": self.carried_requests,
+                    "queue_depth": self._q.qsize()}
 
     def close(self, timeout: float = 2.0):
         """Stop the worker.  Requests it never got to — queued behind the
@@ -135,7 +136,8 @@ class RequestBatcher:
         self._fail_pending(BatcherClosed())
 
     def _fail_pending(self, exc: BaseException) -> None:
-        carry, self._carry = self._carry, None
+        with self._state_lock:
+            carry, self._carry = self._carry, None
         if carry is not None:
             carry.future.set_exception(exc)
         while True:
@@ -155,10 +157,12 @@ class RequestBatcher:
             self._fail_pending(BatcherClosed())
 
     def _serve_batches(self):
-        while self._running:
-            if self._carry is not None:
+        while True:
+            with self._state_lock:
+                if not self._running:
+                    return
                 first, self._carry = self._carry, None
-            else:
+            if first is None:
                 first = self._q.get()
                 if first is None:
                     return
@@ -173,11 +177,13 @@ class RequestBatcher:
                 except queue.Empty:
                     break
                 if nxt is None:
-                    self._running = False
+                    with self._state_lock:
+                        self._running = False
                     break
                 if nxt.extras_key != first.extras_key:
-                    self._carry = nxt       # incompatible: heads next batch
-                    self.carried_requests += 1
+                    with self._state_lock:  # incompatible: heads next batch
+                        self._carry = nxt
+                        self.carried_requests += 1
                     break
                 batch.append(nxt)
             try:
@@ -191,8 +197,9 @@ class RequestBatcher:
                 continue
             # count before resolving: a caller reading stats() right after
             # its result arrives must see this batch reflected
-            self.batches_served += 1
-            self.requests_served += len(batch)
+            with self._state_lock:
+                self.batches_served += 1
+                self.requests_served += len(batch)
             for i, r in enumerate(batch):
                 r.future.set((d[i, : r.k], ids[i, : r.k]))
 

@@ -92,7 +92,7 @@ def _hit_to_dict(hit: Hit) -> Dict[str, Any]:
 class QuantixarService:
     def __init__(self, db: Optional[Database] = None,
                  config: Optional[ServiceConfig] = None):
-        self.db = db if db is not None else Database()
+        self.db = db if db is not None else Database()  # guarded-by: _lock
         self.config = config or ServiceConfig()
         # serializes DDL and the restore swap; data-plane ops rely on each
         # collection's own lock
@@ -132,7 +132,10 @@ class QuantixarService:
     # ------------------------------------------------------------- internals
     def _col(self, name: str):
         try:
-            return self.db.collection(name)
+            # a restore swaps self.db atomically; data-plane handlers may
+            # read the old or new reference, and either is a consistent
+            # database whose collections guard themselves
+            return self.db.collection(name)  # unguarded-ok: atomic ref snapshot; restore swap is safe to race
         except KeyError as exc:
             raise rq.error_to_exception(
                 rq.ErrorInfo(rq.NOT_FOUND, str(exc.args[0])))

@@ -5,10 +5,10 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.api import (And, BoolField, CollectionSchema, Database, Hit,
+from repro.api import (And, BoolField, CollectionSchema, Database,
                        KeywordField, NumericField, Predicate, SchemaError,
                        VectorField)
-from repro.core import EngineConfig, PQConfig, QuantixarEngine
+from repro.core import PQConfig, QuantixarEngine
 from repro.data.synthetic import gaussian_mixture
 
 N, DIM = 600, 32

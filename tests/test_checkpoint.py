@@ -2,7 +2,6 @@
 
 import json
 import os
-import shutil
 
 import numpy as np
 import pytest
@@ -45,6 +44,31 @@ class TestCommits:
         t = store.save_async({"x": np.full(5, 3.0)}, step=2)
         store.wait_async()
         assert (store.load()["x"] == 3.0).all()
+
+    def test_concurrent_async_commits(self, store):
+        # regression: the async-thread list is lock-guarded, and
+        # wait_async joins OUTSIDE the lock (the background save takes
+        # the commit lock itself, so a locked join would deadlock)
+        import threading
+        errs = []
+
+        def spawn(i):
+            try:
+                store.save_async({"x": np.full(3, float(i))}, step=i)
+            except Exception as exc:       # noqa: BLE001
+                errs.append(exc)
+
+        callers = [threading.Thread(target=spawn, args=(i,))
+                   for i in range(6)]
+        for c in callers:
+            c.start()
+        for c in callers:
+            c.join()
+        store.wait_async()
+        assert not errs
+        assert len(store.generations()) >= 1   # keep=2 bounds retention
+        assert store.load()["x"].shape == (3,)
+        store.wait_async()                     # idempotent on empty list
 
     def test_object_dtype_metadata_columns(self, store):
         state = {"meta": np.array(["a", None, 3], dtype=object)}

@@ -1,7 +1,5 @@
 """QuantixarEngine: the composition matrix, MEVS, rescore, persistence."""
 
-import dataclasses
-
 import numpy as np
 import pytest
 

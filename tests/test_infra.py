@@ -6,13 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:      # deterministic shim keeps properties runnable
-    from _hypothesis_fallback import given, settings, st
 
-from repro.data import (Prefetcher, fashion_mnist_like, gaussian_mixture,
-                        host_slice, lm_batches, sift_like, zipf_tokens)
+from repro.data import (Prefetcher, fashion_mnist_like, host_slice,
+                        lm_batches, sift_like, zipf_tokens)
 from repro.optim import AdamWConfig, adamw
 from repro.serving.batcher import QuorumFanout, RequestBatcher
 
@@ -129,6 +125,46 @@ class TestServing:
         assert all(ids.shape == (3,) for _, ids in outs)
         assert b.requests_served == 10
         assert b.batches_served <= 10    # some batching happened
+
+    def test_batcher_counters_consistent_under_concurrency(self):
+        # regression: counters are mutated by the worker under _state_lock
+        # and read via stats() under the same lock, so a snapshot can never
+        # show more requests resolved than counted
+        import threading
+
+        def search(q, k):
+            return (np.zeros((len(q), k), np.float32),
+                    np.tile(np.arange(k), (len(q), 1)))
+
+        b = RequestBatcher(search, max_batch=4, max_wait_ms=1)
+        done = []
+
+        def client():
+            for _ in range(25):
+                fut = b.submit(np.zeros(4, np.float32), 2)
+                fut.result(timeout=5)
+                done.append(1)
+
+        readers_ok = []
+
+        def reader():
+            deadline = time.time() + 20
+            while len(done) < 100 and time.time() < deadline:
+                s = b.stats()
+                readers_ok.append(s["requests_served"] >= 0
+                                  and s["batches_served"]
+                                  <= s["requests_served"])
+
+        threads = [threading.Thread(target=client) for _ in range(4)] \
+            + [threading.Thread(target=reader)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        b.close()
+        assert len(done) == 100
+        assert all(readers_ok)
+        assert b.stats()["requests_served"] == 100
 
     def test_quorum_fanout_tolerates_straggler(self):
         def fast(q, k):

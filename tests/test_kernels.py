@@ -246,6 +246,21 @@ class TestSLSTMKernel:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=3e-5, atol=3e-5)
 
+    def test_ops_dispatcher_force_ref_parity(self):
+        """`ops.slstm_sequence` routes ref vs kernel per the registry
+        contract (the qlint PAL004 rule requires this dispatcher)."""
+        rng = np.random.RandomState(11)
+        gates = jnp.asarray(rng.randn(2, 24, 64), jnp.float32)
+        r = jnp.asarray(0.3 * rng.randn(4, 4, 4, 4), jnp.float32)
+        bias = jnp.asarray(rng.randn(64), jnp.float32)
+        a = ops.slstm_sequence(gates, r, bias, n_heads=4, force_ref=True)
+        b = ops.slstm_sequence(gates, r, bias, n_heads=4, chunk=8,
+                               force_ref=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-5, atol=3e-5)
+        from repro.kernels import slstm_sequence as exported
+        assert exported is ops.slstm_sequence
+
 
 class TestOpsDispatch:
     def test_force_ref_matches_kernel(self):

@@ -1,0 +1,539 @@
+"""qlint analyzer tests: every rule fires on a known-bad fixture, every
+escape hatch suppresses, and the repo itself stays clean.
+
+Each fixture is a deliberately broken snippet written to tmp_path; the
+assertion is always (rule id, file, line) so a rule that silently stops
+firing — or fires on the wrong line — fails loudly here.
+"""
+
+import os
+import textwrap
+
+from tools.qlint import (check_jax_hygiene, check_kernel_registry,
+                         check_lock_discipline, check_wire_protocol)
+from tools.qlint.cli import main as qlint_main
+from tools.qlint.wire import WirePaths
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _write(tmp_path, name, text):
+    path = tmp_path / name
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(text))
+    return str(path)
+
+
+def _rules(violations):
+    return [v.rule for v in violations]
+
+
+def _by_rule(violations, rule):
+    return [v for v in violations if v.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# lock discipline
+# ---------------------------------------------------------------------------
+
+class TestLockRules:
+    def test_lock001_unguarded_access_fires_with_line(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            import threading
+
+            class Store:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._items = []   # guarded-by: _lock
+
+                def size(self):
+                    return len(self._items)
+            """)
+        out = check_lock_discipline([path])
+        assert _rules(out) == ["LOCK001"]
+        assert out[0].path == path and out[0].line == 9
+        assert "_items" in out[0].message and "_lock" in out[0].message
+
+    def test_lock001_write_outside_lock_fires(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            import threading
+
+            class Store:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._n = 0   # guarded-by: _lock
+
+                def bump(self):
+                    self._n += 1
+            """)
+        assert _rules(check_lock_discipline([path])) == ["LOCK001"]
+
+    def test_with_lock_satisfies(self, tmp_path):
+        path = _write(tmp_path, "good.py", """\
+            import threading
+
+            class Store:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._items = []   # guarded-by: _lock
+
+                def size(self):
+                    with self._lock:
+                        return len(self._items)
+            """)
+        assert check_lock_discipline([path]) == []
+
+    def test_any_of_multiple_locks(self, tmp_path):
+        path = _write(tmp_path, "good.py", """\
+            import threading
+
+            class Store:
+                def __init__(self):
+                    self._a = threading.Lock()
+                    self._b = threading.Lock()
+                    self._flag = False   # guarded-by: _a|_b
+
+                def via_b(self):
+                    with self._b:
+                        return self._flag
+            """)
+        assert check_lock_discipline([path]) == []
+
+    def test_requires_lock_contract_trusted(self, tmp_path):
+        path = _write(tmp_path, "good.py", """\
+            import threading
+
+            class Store:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._items = []   # guarded-by: _lock
+
+                def _drain(self):   # requires-lock: _lock
+                    self._items.clear()
+            """)
+        assert check_lock_discipline([path]) == []
+
+    def test_unguarded_ok_with_reason_suppresses(self, tmp_path):
+        path = _write(tmp_path, "good.py", """\
+            import threading
+
+            class Store:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._n = 0   # guarded-by: _lock
+
+                def peek(self):
+                    return self._n  # unguarded-ok: racy stat read is fine
+            """)
+        assert check_lock_discipline([path]) == []
+
+    def test_lock003_reasonless_hatch_fires(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            import threading
+
+            class Store:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._n = 0   # guarded-by: _lock
+
+                def peek(self):
+                    return self._n  # unguarded-ok:
+            """)
+        out = check_lock_discipline([path])
+        assert _rules(out) == ["LOCK003"]
+
+    def test_lock002_nonexistent_lock_fires(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            class Store:
+                def __init__(self):
+                    self._n = 0   # guarded-by: _mutex
+            """)
+        out = check_lock_discipline([path])
+        assert "LOCK002" in _rules(out)
+        assert "_mutex" in _by_rule(out, "LOCK002")[0].message
+
+    def test_lock004_annotation_outside_class_fires(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            import threading
+            _lock = threading.Lock()
+            COUNTER = 0   # guarded-by: _lock
+            """)
+        out = check_lock_discipline([path])
+        assert _rules(out) == ["LOCK004"] and out[0].line == 3
+
+    def test_init_is_exempt(self, tmp_path):
+        # __init__ publishes the object; pre-publication writes are safe
+        path = _write(tmp_path, "good.py", """\
+            import threading
+
+            class Store:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._n = 0   # guarded-by: _lock
+                    self._n = 1
+            """)
+        assert check_lock_discipline([path]) == []
+
+
+# ---------------------------------------------------------------------------
+# wire-protocol exhaustiveness
+# ---------------------------------------------------------------------------
+
+_WIRE_REQUESTS = """\
+from typing import Union
+
+class Request:
+    op = "abstract"
+
+class Ping(Request):
+    op = "ping"
+
+class Flush(Request):{flush_comment}
+    op = "flush"
+
+AnyRequest = Union[{union}]
+"""
+
+_WIRE_SERVICE = """\
+from . import requests as rq
+
+class Service:
+    def _ping(self, req):
+        return "pong"
+
+    def _flush(self, req):
+        return "ok"
+
+    _HANDLERS = {{
+        {handlers}
+    }}
+"""
+
+_WIRE_HTTP = """\
+from . import requests as rq
+
+def _route(method, pattern):
+    def deco(fn):
+        return fn
+    return deco
+
+@_route("POST", r"^/v1/ping$")
+def _r_ping(body):
+    return rq.Ping()
+{flush_route}
+"""
+
+_WIRE_CLIENT = """\
+class Client:
+    def ping(self):
+        return self._post("/v1/ping")
+{flush_call}
+"""
+
+
+def _wire_fixture(tmp_path, *, union="Ping, Flush",
+                  handlers='rq.Ping: Service._ping, rq.Flush: Service._flush',
+                  flush_route="""
+    @_route("POST", r"^/v1/flush$")
+    def _r_flush(body):
+        return rq.Flush()
+    """,
+                  flush_call="""
+    def flush(self):
+        return self._post("/v1/flush")
+    """,
+                  flush_comment=""):
+    return WirePaths(
+        requests_py=_write(tmp_path, "requests.py", _WIRE_REQUESTS.format(
+            union=union, flush_comment=flush_comment)),
+        service_py=_write(tmp_path, "service.py", _WIRE_SERVICE.format(
+            handlers=handlers)),
+        http_py=_write(tmp_path, "http.py", _WIRE_HTTP.format(
+            flush_route=textwrap.dedent(flush_route))),
+        client_py=_write(tmp_path, "client.py", _WIRE_CLIENT.format(
+            flush_call=textwrap.indent(textwrap.dedent(flush_call), "    "))),
+    )
+
+
+class TestWireRules:
+    def test_complete_protocol_is_clean(self, tmp_path):
+        assert check_wire_protocol(_wire_fixture(tmp_path)) == []
+
+    def test_wire001_missing_from_union(self, tmp_path):
+        paths = _wire_fixture(tmp_path, union="Ping")
+        out = check_wire_protocol(paths)
+        assert _rules(out) == ["WIRE001"]
+        assert "Flush" in out[0].message and out[0].path == paths.requests_py
+
+    def test_wire002_missing_handler(self, tmp_path):
+        paths = _wire_fixture(tmp_path, handlers="rq.Ping: Service._ping,")
+        out = check_wire_protocol(paths)
+        assert _rules(out) == ["WIRE002"]
+        assert "Flush" in out[0].message and out[0].path == paths.service_py
+
+    def test_wire003_missing_route(self, tmp_path):
+        paths = _wire_fixture(tmp_path, flush_route="")
+        out = check_wire_protocol(paths)
+        assert _rules(out) == ["WIRE003"]
+        assert "Flush" in out[0].message
+
+    def test_wire004_client_never_calls_route(self, tmp_path):
+        paths = _wire_fixture(tmp_path, flush_call="")
+        out = check_wire_protocol(paths)
+        assert _rules(out) == ["WIRE004"]
+        assert "/v1/flush" in out[0].message
+
+    def test_wire_ok_waives_http_and_client_legs(self, tmp_path):
+        paths = _wire_fixture(
+            tmp_path, flush_route="", flush_call="",
+            flush_comment="  # wire-ok: rpc-only op, no REST surface")
+        assert check_wire_protocol(paths) == []
+
+    def test_wire005_reasonless_waiver_fires(self, tmp_path):
+        paths = _wire_fixture(
+            tmp_path, flush_route="", flush_call="",
+            flush_comment="  # wire-ok:")
+        out = check_wire_protocol(paths)
+        assert "WIRE005" in _rules(out)
+
+    def test_wire_ok_still_requires_handler(self, tmp_path):
+        # the waiver only covers transport legs, not the dispatch table
+        paths = _wire_fixture(
+            tmp_path, handlers="rq.Ping: Service._ping,",
+            flush_route="", flush_call="",
+            flush_comment="  # wire-ok: rpc-only op")
+        assert _rules(check_wire_protocol(paths)) == ["WIRE002"]
+
+
+# ---------------------------------------------------------------------------
+# jax/pallas hygiene
+# ---------------------------------------------------------------------------
+
+class TestJaxRules:
+    def test_pal001_float_on_traced_fires(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            import jax
+
+            @jax.jit
+            def f(x):
+                return float(x)
+            """)
+        out = check_jax_hygiene([path])
+        assert _rules(out) == ["PAL001"] and out[0].line == 5
+
+    def test_pal001_item_and_numpy_fire(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):
+                y = x.item()
+                return np.sum(x)
+            """)
+        out = check_jax_hygiene([path])
+        assert _rules(out) == ["PAL001", "PAL001"]
+
+    def test_pal002_branch_on_traced_fires(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            import jax
+
+            @jax.jit
+            def f(x):
+                if x > 0:
+                    return x
+                return -x
+            """)
+        out = check_jax_hygiene([path])
+        assert _rules(out) == ["PAL002"] and out[0].line == 5
+
+    def test_pal002_loop_over_traced_fires(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            import jax
+
+            @jax.jit
+            def f(x):
+                total = 0
+                for v in x:
+                    total = total + v
+                return total
+            """)
+        assert _rules(check_jax_hygiene([path])) == ["PAL002"]
+
+    def test_static_args_shape_and_none_checks_are_clean(self, tmp_path):
+        path = _write(tmp_path, "good.py", """\
+            import functools
+            import jax
+            import jax.numpy as jnp
+
+            @functools.partial(jax.jit, static_argnames=("k", "mode"))
+            def f(x, mask, k, mode="l2"):
+                n, d = x.shape
+                if mode == "dot":         # static: fine
+                    x = -x
+                if mask is not None:      # structural: fine
+                    x = jnp.where(mask[:, None], x, jnp.inf)
+                if n > 4:                 # shape is static under tracing
+                    k = min(k, n)
+                return jax.lax.top_k(-x.sum(-1), k)
+            """)
+        assert check_jax_hygiene([path]) == []
+
+    def test_pallas_kernel_body_checked(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            import functools
+            import jax
+            from jax.experimental import pallas as pl
+
+            def _k(x_ref, o_ref, *, blk):
+                v = x_ref[...]
+                if v.sum() > 0:
+                    o_ref[...] = v
+                else:
+                    o_ref[...] = -v
+
+            def run(x):
+                return pl.pallas_call(
+                    functools.partial(_k, blk=8),
+                    out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+            """)
+        out = check_jax_hygiene([path])
+        assert _rules(out) == ["PAL002"] and out[0].line == 7
+
+    def test_pallas_ok_with_reason_suppresses(self, tmp_path):
+        path = _write(tmp_path, "good.py", """\
+            import jax
+
+            @jax.jit
+            def f(x):  # pallas-ok: debug-only helper, never traced in prod
+                return float(x)
+            """)
+        assert check_jax_hygiene([path]) == []
+
+    def test_pallas_ok_reasonless_fires(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            import jax
+
+            @jax.jit
+            def f(x):  # pallas-ok:
+                return float(x)
+            """)
+        out = check_jax_hygiene([path])
+        assert _rules(out) == ["PAL001"]
+        assert "needs a reason" in out[0].message
+
+    def test_pal003_mutable_default_on_static_fires(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("tiles",))
+            def f(x, tiles=[8, 128]):
+                return x
+            """)
+        out = check_jax_hygiene([path])
+        assert _rules(out) == ["PAL003"]
+
+    def test_pal003_unhashable_literal_at_call_site_fires(self, tmp_path):
+        path = _write(tmp_path, "bad.py", """\
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("tiles",))
+            def f(x, tiles=(8, 128)):
+                return x
+
+            def caller(x):
+                return f(x, tiles=[8, 128])
+            """)
+        out = check_jax_hygiene([path])
+        assert _rules(out) == ["PAL003"] and out[0].line == 9
+
+    def test_pal004_kernel_without_ref_or_dispatcher(self, tmp_path):
+        kdir = tmp_path / "kernels"
+        _write(tmp_path, "kernels/ref.py", """\
+            def other_ref(x):
+                return x
+            """)
+        _write(tmp_path, "kernels/ops.py", """\
+            from .mykern import my_fused_kernel
+
+            def my_fused(x, *, force_ref=None):
+                # references the kernel but there is no *_ref oracle
+                return my_fused_kernel(x)
+            """)
+        _write(tmp_path, "kernels/mykern.py", """\
+            def my_fused_kernel(x):
+                return x
+            """)
+        out = check_kernel_registry(str(kdir))
+        assert _rules(out) == ["PAL004"]
+        assert "my_fused*_ref" in out[0].message
+
+    def test_pal004_missing_dispatcher(self, tmp_path):
+        kdir = tmp_path / "kernels"
+        _write(tmp_path, "kernels/ref.py", """\
+            def my_fused_ref(x):
+                return x
+            """)
+        _write(tmp_path, "kernels/ops.py", """\
+            def unrelated(x):
+                return x
+            """)
+        _write(tmp_path, "kernels/mykern.py", """\
+            def my_fused_kernel(x):
+                return x
+            """)
+        out = check_kernel_registry(str(kdir))
+        assert _rules(out) == ["PAL004"]
+        assert "force_ref dispatcher" in out[0].message
+
+    def test_pal004_complete_registry_is_clean(self, tmp_path):
+        kdir = tmp_path / "kernels"
+        _write(tmp_path, "kernels/ref.py", """\
+            def my_fused_ref(x):
+                return x
+            """)
+        _write(tmp_path, "kernels/ops.py", """\
+            from . import ref
+            from .mykern import my_fused_kernel
+
+            def my_fused(x, *, force_ref=None):
+                if force_ref:
+                    return ref.my_fused_ref(x)
+                return my_fused_kernel(x)
+            """)
+        _write(tmp_path, "kernels/mykern.py", """\
+            def my_fused_kernel(x):
+                return x
+            """)
+        assert check_kernel_registry(str(kdir)) == []
+
+
+# ---------------------------------------------------------------------------
+# the repo itself + CLI plumbing
+# ---------------------------------------------------------------------------
+
+class TestRepoIsClean:
+    def test_full_repo_run_is_clean(self, capsys):
+        rc = qlint_main(["--root", REPO])
+        captured = capsys.readouterr()
+        assert rc == 0, f"qlint found violations:\n{captured.out}"
+        assert "clean" in captured.err
+
+    def test_cli_exit_code_counts_violations(self, tmp_path, capsys):
+        bad = _write(tmp_path, "bad.py", """\
+            import threading
+
+            class Store:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._n = 0   # guarded-by: _lock
+
+                def peek(self):
+                    return self._n
+            """)
+        rc = qlint_main(["--root", REPO, "--only", "locks", bad])
+        captured = capsys.readouterr()
+        assert rc == 1
+        assert "LOCK001" in captured.out and ":9:" in captured.out

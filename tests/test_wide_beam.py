@@ -13,14 +13,12 @@ Covers the PR-4 acceptance surface:
     expansion_width knob across engine / Query / wire protocol.
 """
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import HNSWConfig, build, bulk_build, exact_knn, recall_at_k
+from repro.core import HNSWConfig, build, exact_knn, recall_at_k
 from repro.core import bq as bq_mod
 from repro.core import pq as pq_mod
 from repro.core.engine import EngineConfig, QuantixarEngine

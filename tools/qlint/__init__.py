@@ -1,0 +1,31 @@
+"""qlint: repo-custom static analysis for the Quantixar serving and
+kernel planes.
+
+Three AST-based analyzers, run via ``make lint`` / ``python -m tools.qlint``:
+
+  * :mod:`tools.qlint.locks`   — lock-discipline checker (``# guarded-by:``
+    annotation convention; see tools/qlint/README.md);
+  * :mod:`tools.qlint.wire`    — wire-protocol exhaustiveness checker
+    (request dataclasses ↔ service dispatch ↔ HTTP routes ↔ client);
+  * :mod:`tools.qlint.jaxlint` — JAX/Pallas hygiene (Python branching /
+    host calls on traced values, unhashable static args, kernel
+    reference-implementation registry).
+
+Plus a runtime twin, :mod:`tools.qlint.runtime`: an instrumented
+``TracedRLock`` that records the lock-acquisition-order graph across
+threads, detects order cycles (potential deadlocks) and long holds, and
+powers the thread-fuzz stress test.
+"""
+
+from .report import Violation
+from .locks import check_lock_discipline
+from .wire import check_wire_protocol
+from .jaxlint import check_jax_hygiene, check_kernel_registry
+
+__all__ = [
+    "Violation",
+    "check_lock_discipline",
+    "check_wire_protocol",
+    "check_jax_hygiene",
+    "check_kernel_registry",
+]

@@ -1,0 +1,104 @@
+"""qlint command line: run all analyzers, print violations, exit nonzero.
+
+Usage (from the repo root)::
+
+    PYTHONPATH=src:. python -m tools.qlint            # whole repo
+    python -m tools.qlint --only locks src/repro/api/collection.py
+
+Exit status is the number of violations (capped at 125) so ``make lint``
+and CI fail on any finding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Sequence
+
+from .jaxlint import check_jax_hygiene, check_kernel_registry
+from .locks import check_lock_discipline
+from .report import Violation
+from .wire import WirePaths, check_wire_protocol
+
+_ANALYZERS = ("locks", "wire", "jax", "kernels")
+
+
+def _repo_root() -> str:
+    # tools/qlint/cli.py -> repo root is two levels up from tools/
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def _python_files(root: str) -> List[str]:
+    out: List[str] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fname in sorted(filenames):
+            if fname.endswith(".py"):
+                out.append(os.path.join(dirpath, fname))
+    return sorted(out)
+
+
+def main(argv: Sequence[str] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="qlint", description="Quantixar repo-custom static analysis")
+    parser.add_argument(
+        "paths", nargs="*",
+        help="files to check (default: the whole serving/kernel tree)")
+    parser.add_argument(
+        "--only", choices=_ANALYZERS, action="append", default=None,
+        help="run a subset of analyzers (repeatable)")
+    parser.add_argument(
+        "--root", default=None,
+        help="repo root (default: derived from this file's location)")
+    args = parser.parse_args(argv)
+
+    root = os.path.abspath(args.root) if args.root else _repo_root()
+    src = os.path.join(root, "src", "repro")
+    enabled = set(args.only) if args.only else set(_ANALYZERS)
+
+    if args.paths:
+        files = [os.path.abspath(p) for p in args.paths]
+    else:
+        files = _python_files(src)
+
+    violations: List[Violation] = []
+    if "locks" in enabled:
+        violations += check_lock_discipline(files)
+    if "jax" in enabled:
+        violations += check_jax_hygiene(files)
+    if "kernels" in enabled:
+        kernels_dir = os.path.join(src, "kernels")
+        if os.path.isdir(kernels_dir):
+            violations += check_kernel_registry(kernels_dir)
+    if "wire" in enabled and not args.paths:
+        # the wire checker cross-references four fixed modules; it only
+        # makes sense on the full tree, not on an ad-hoc file list
+        violations += check_wire_protocol(WirePaths(
+            requests_py=os.path.join(src, "api", "requests.py"),
+            service_py=os.path.join(src, "serving", "service.py"),
+            http_py=os.path.join(src, "serving", "http.py"),
+            client_py=os.path.join(src, "api", "client.py"),
+        ))
+
+    rel = []
+    for v in violations:
+        path = os.path.relpath(v.path, root) \
+            if os.path.isabs(v.path) else v.path
+        rel.append(Violation(v.rule, path, v.line, v.message))
+    for v in rel:
+        print(v.format())
+    n = len(rel)
+    if n:
+        print(f"qlint: {n} violation{'s' if n != 1 else ''}",
+              file=sys.stderr)
+    else:
+        checked = ", ".join(sorted(enabled))
+        print(f"qlint: clean ({len(files)} files; {checked})",
+              file=sys.stderr)
+    return min(n, 125)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

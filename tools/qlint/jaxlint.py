@@ -1,0 +1,430 @@
+"""JAX/Pallas hygiene lint (rules PAL001-PAL004).
+
+Analyzes functions that run under tracing — ``@jax.jit`` / ``@jit`` /
+``functools.partial(jax.jit, ...)`` decorated functions, and Pallas kernel
+bodies handed to ``pl.pallas_call`` — with a lightweight intraprocedural
+taint pass: non-static parameters are *traced*; taint propagates through
+assignments and expressions but dies at shape/dtype introspection
+(``x.shape``, ``x.ndim``, ``x.dtype``, ``len(x)``), which is static under
+tracing.
+
+Rules:
+  PAL001  host-side value extraction on a traced value inside a traced
+          function: ``float()/int()/bool()`` calls, ``.item()`` /
+          ``.tolist()``, or any ``np.*`` call taking a traced argument
+          (silent device sync at best, tracer leak at worst)
+  PAL002  Python control flow (``if``/``while``/``for``/ternary/``assert``)
+          conditioned on a traced value — must be ``lax.cond`` /
+          ``lax.while_loop`` / ``jnp.where`` (``x is None`` checks are
+          trace-time structure and stay legal)
+  PAL003  unhashable static argument: a static parameter with a mutable
+          default, or a call site passing a list/dict/set literal for a
+          static parameter (jit would raise at runtime — catch it in CI)
+  PAL004  kernel-registry drift: a module under ``kernels/`` exports a
+          ``*_kernel`` entry point with no ``*_ref`` reference
+          implementation in ``ref.py`` or no ``force_ref`` dispatcher in
+          ``ops.py`` routing between the two
+
+``# pallas-ok: <reason>`` on the flagged line (or the ``def`` line for a
+whole function) suppresses PAL001/PAL002; a reasonless hatch is itself a
+violation (PAL001 with a dedicated message).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Sequence, Set
+
+from .report import (Source, Violation, const_str_tuple, dotted_name,
+                     find_suppression, signature_lines, sort_violations)
+
+# attribute reads that collapse a traced value to static python
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+# host-extraction method calls on traced arrays
+_HOST_METHODS = {"item", "tolist", "numpy"}
+# builtins that force concretization
+_CONCRETIZERS = {"float", "int", "bool", "complex"}
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+_PALLAS_CALL_NAMES = {"pl.pallas_call", "pallas_call"}
+
+
+class _JitTarget:
+    """One function to analyze + which of its params are static."""
+
+    def __init__(self, fn: ast.FunctionDef, static: Set[str], kind: str):
+        self.fn = fn
+        self.static = static
+        self.kind = kind                    # "jit" | "pallas-kernel"
+
+    def param_names(self) -> List[str]:
+        a = self.fn.args
+        return [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+
+
+def _jit_decoration(fn: ast.FunctionDef) -> Optional[Set[str]]:
+    """Static param names when fn is jit-decorated, else None."""
+    for dec in fn.decorator_list:
+        name = dotted_name(dec)
+        if name in _JIT_NAMES:
+            return set()
+        if isinstance(dec, ast.Call):
+            fname = dotted_name(dec.func)
+            if fname in _JIT_NAMES:
+                return _static_from_kwargs(fn, dec.keywords)
+            if fname in _PARTIAL_NAMES and dec.args \
+                    and dotted_name(dec.args[0]) in _JIT_NAMES:
+                return _static_from_kwargs(fn, dec.keywords)
+    return None
+
+
+def _static_from_kwargs(fn: ast.FunctionDef,
+                        keywords: List[ast.keyword]) -> Set[str]:
+    static: Set[str] = set()
+    a = fn.args
+    positional = [p.arg for p in a.posonlyargs + a.args]
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            names = const_str_tuple(kw.value)
+            if names:
+                static |= set(names)
+        elif kw.arg == "static_argnums":
+            nums: List[int] = []
+            if isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, int):
+                nums = [kw.value.value]
+            elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                nums = [e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, int)]
+            for n in nums:
+                if 0 <= n < len(positional):
+                    static.add(positional[n])
+    return static
+
+
+def _pallas_kernel_names(tree: ast.Module) -> Set[str]:
+    """Function names passed (possibly via functools.partial) as the first
+    argument of a ``pl.pallas_call`` in this module."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and dotted_name(node.func) in _PALLAS_CALL_NAMES
+                and node.args):
+            continue
+        head = node.args[0]
+        if isinstance(head, ast.Call) \
+                and dotted_name(head.func) in _PARTIAL_NAMES and head.args:
+            head = head.args[0]
+        name = dotted_name(head)
+        if name:
+            out.add(name.split(".")[-1])
+    return out
+
+
+def _collect_targets(src: Source) -> List[_JitTarget]:
+    targets = []
+    kernel_names = _pallas_kernel_names(src.tree)
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        static = _jit_decoration(node)
+        if static is not None:
+            targets.append(_JitTarget(node, static, "jit"))
+        elif node.name in kernel_names:
+            # Pallas kernel body: positional params are Refs (traced);
+            # keyword-only params are bound via functools.partial (static)
+            a = node.args
+            kw_static = {p.arg for p in a.kwonlyargs}
+            targets.append(_JitTarget(node, kw_static, "pallas-kernel"))
+    return targets
+
+
+class _Taint(ast.NodeVisitor):
+    """Single forward pass over a traced function body."""
+
+    def __init__(self, src: Source, target: _JitTarget,
+                 violations: List[Violation]):
+        self.src = src
+        self.target = target
+        self.violations = violations
+        self.tainted: Set[str] = {
+            p for p in target.param_names() if p not in target.static}
+
+    # ------------------------------------------------------------- taint expr
+    def is_tainted(self, node: Optional[ast.AST]) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False                  # static under tracing
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            fname = dotted_name(node.func)
+            if fname == "len":
+                return False                  # static length
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _STATIC_ATTRS:
+                return False
+            parts = [node.func] if not isinstance(node.func, ast.Name) else []
+            parts += list(node.args) + [kw.value for kw in node.keywords]
+            return any(self.is_tainted(p) for p in parts)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` is trace-time structure
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return any(self.is_tainted(c)
+                       for c in [node.left] + list(node.comparators))
+        if isinstance(node, (ast.Constant, ast.Lambda)):
+            return False
+        return any(self.is_tainted(c) for c in ast.iter_child_nodes(node))
+
+    # ----------------------------------------------------------- assignments
+    def _assign_names(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._assign_names(elt, tainted)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        tainted = self.is_tainted(node.value)
+        for target in node.targets:
+            self._assign_names(target, tainted)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self.generic_visit(node)
+            self._assign_names(node.target, self.is_tainted(node.value))
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node)
+        if self.is_tainted(node.value):
+            self._assign_names(node.target, True)
+
+    # -------------------------------------------------------------- nested fn
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        # nested defs (scan/loop bodies, per-subspace closures): their own
+        # params are traced by the enclosing combinator; closure taint rides
+        # along.  Decorators like @pl.when(pred) are the sanctioned form of
+        # traced branching — not flagged.
+        inner_params = {p.arg for p in node.args.posonlyargs
+                        + node.args.args + node.args.kwonlyargs}
+        saved = set(self.tainted)
+        self.tainted |= inner_params
+        for stmt in node.body:
+            self.visit(stmt)
+        self.tainted = saved
+
+    # ------------------------------------------------------------- violations
+    def _flag(self, node: ast.AST, rule: str, message: str) -> None:
+        reason = find_suppression(
+            self.src, list(self.src.span_lines(node)), "pallas")
+        if reason == "":
+            self.violations.append(Violation(
+                "PAL001", self.src.path, node.lineno,
+                "'# pallas-ok:' needs a reason"))
+            return
+        if reason is not None:
+            return
+        self.violations.append(Violation(rule, self.src.path, node.lineno,
+                                         message))
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self.generic_visit(node)
+        fname = dotted_name(node.func)
+        where = f"in traced function {self.target.fn.name!r}"
+        if fname in _CONCRETIZERS and node.args \
+                and self.is_tainted(node.args[0]):
+            self._flag(node, "PAL001",
+                       f"{fname}() concretizes a traced value {where}")
+            return
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _HOST_METHODS \
+                and self.is_tainted(node.func.value):
+            self._flag(node, "PAL001",
+                       f".{node.func.attr}() pulls a traced value to host "
+                       f"{where}")
+            return
+        if fname and fname.split(".")[0] in ("np", "numpy") \
+                and len(fname.split(".")) > 1:
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            if any(self.is_tainted(a) for a in args):
+                self._flag(node, "PAL001",
+                           f"{fname}() is host numpy on a traced value "
+                           f"{where} — use jnp")
+
+    def _flag_branch(self, node: ast.AST, test: ast.AST, kind: str) -> None:
+        if self.is_tainted(test):
+            self._flag(node, "PAL002",
+                       f"Python {kind} on a traced value in "
+                       f"{self.target.fn.name!r} — use lax.cond/"
+                       f"lax.while_loop/jnp.where")
+
+    def visit_If(self, node: ast.If) -> None:
+        self._flag_branch(node, node.test, "if")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        self._flag_branch(node, node.test, "ternary")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._flag_branch(node, node.test, "while")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._flag_branch(node, node.test, "assert")
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        if self.is_tainted(node.iter):
+            self._flag(node, "PAL002",
+                       f"Python for-loop over a traced value in "
+                       f"{self.target.fn.name!r} — use lax.fori_loop/scan")
+        # the loop variable binds elements of the iterable
+        self._assign_names(node.target, self.is_tainted(node.iter))
+        for stmt in node.body + node.orelse:
+            self.visit(stmt)
+
+
+def _check_static_hashability(src: Source, targets: List[_JitTarget],
+                              violations: List[Violation]) -> None:
+    static_by_fn: Dict[str, Set[str]] = {
+        t.fn.name: t.static for t in targets if t.kind == "jit" and t.static}
+    # mutable defaults on static params
+    for t in targets:
+        if t.kind != "jit" or not t.static:
+            continue
+        a = t.fn.args
+        named = a.posonlyargs + a.args
+        for param, default in zip(named[len(named) - len(a.defaults):],
+                                  a.defaults):
+            if param.arg in t.static \
+                    and isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                violations.append(Violation(
+                    "PAL003", src.path, default.lineno,
+                    f"static arg {param.arg!r} of {t.fn.name!r} has an "
+                    f"unhashable (mutable) default"))
+        for param, default in zip(a.kwonlyargs, a.kw_defaults):
+            if default is not None and param.arg in t.static \
+                    and isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                violations.append(Violation(
+                    "PAL003", src.path, default.lineno,
+                    f"static arg {param.arg!r} of {t.fn.name!r} has an "
+                    f"unhashable (mutable) default"))
+    # call sites passing unhashable literals for known static params
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = dotted_name(node.func)
+        if fname is None:
+            continue
+        static = static_by_fn.get(fname.split(".")[-1])
+        if not static:
+            continue
+        for kw in node.keywords:
+            if kw.arg in static and isinstance(
+                    kw.value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                               ast.DictComp, ast.SetComp)):
+                violations.append(Violation(
+                    "PAL003", src.path, kw.value.lineno,
+                    f"call to {fname!r} passes an unhashable literal for "
+                    f"static arg {kw.arg!r} — jit will raise; use a tuple"))
+
+
+def check_jax_hygiene(paths: Sequence[str]) -> List[Violation]:
+    """PAL001-PAL003 over the given Python files."""
+    violations: List[Violation] = []
+    for path in paths:
+        src = Source.load(path)
+        targets = _collect_targets(src)
+        for target in targets:
+            sig = list(signature_lines(target.fn))
+            reason = find_suppression(src, sig, "pallas")
+            if reason == "":
+                violations.append(Violation(
+                    "PAL001", src.path, target.fn.lineno,
+                    f"'# pallas-ok:' on {target.fn.name!r} needs a reason"))
+                continue
+            if reason is not None:
+                continue
+            taint = _Taint(src, target, violations)
+            for stmt in target.fn.body:
+                taint.visit(stmt)
+        _check_static_hashability(src, targets, violations)
+    return sort_violations(violations)
+
+
+def check_kernel_registry(kernels_dir: str) -> List[Violation]:
+    """PAL004: every kernel module ships a reference implementation and a
+    force_ref dispatcher."""
+    violations: List[Violation] = []
+    ref_path = os.path.join(kernels_dir, "ref.py")
+    ops_path = os.path.join(kernels_dir, "ops.py")
+    for required in (ref_path, ops_path):
+        if not os.path.exists(required):
+            violations.append(Violation(
+                "PAL004", required, 1,
+                "kernels/ must ship ref.py (oracles) and ops.py "
+                "(force_ref dispatchers)"))
+            return violations
+    ref_src = Source.load(ref_path)
+    ops_src = Source.load(ops_path)
+    ref_fns = {n.name for n in ref_src.tree.body
+               if isinstance(n, ast.FunctionDef)}
+    # dispatchers: ops.py functions with a force_ref param; note every name
+    # they call so kernel entry points can be matched against them
+    dispatched: Set[str] = set()
+    for node in ops_src.tree.body:
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        params = {p.arg for p in node.args.args + node.args.kwonlyargs}
+        if "force_ref" not in params:
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                name = dotted_name(sub.func)
+                if name:
+                    dispatched.add(name.split(".")[-1])
+    for fname in sorted(os.listdir(kernels_dir)):
+        stem, ext = os.path.splitext(fname)
+        if ext != ".py" or stem in ("__init__", "ref", "ops"):
+            continue
+        src = Source.load(os.path.join(kernels_dir, fname))
+        for node in src.tree.body:
+            if not isinstance(node, ast.FunctionDef) \
+                    or not node.name.endswith("_kernel") \
+                    or node.name.startswith("_"):
+                continue
+            reason = find_suppression(src, [node.lineno], "pallas")
+            if reason == "":
+                violations.append(Violation(
+                    "PAL001", src.path, node.lineno,
+                    f"'# pallas-ok:' on {node.name!r} needs a reason"))
+                continue
+            if reason is not None:
+                continue
+            kernel_stem = node.name[: -len("_kernel")]
+            if not any(r.startswith(kernel_stem) and r.endswith("_ref")
+                       for r in ref_fns):
+                violations.append(Violation(
+                    "PAL004", src.path, node.lineno,
+                    f"kernel {node.name!r} has no {kernel_stem}*_ref oracle "
+                    f"in kernels/ref.py"))
+            if node.name not in dispatched:
+                violations.append(Violation(
+                    "PAL004", ops_src.path, 1,
+                    f"kernel {node.name!r} has no force_ref dispatcher in "
+                    f"kernels/ops.py"))
+    return sort_violations(violations)

@@ -1,0 +1,202 @@
+"""Lock-discipline checker (rules LOCK001-LOCK004).
+
+Convention (see tools/qlint/README.md): a concurrency-critical class
+declares which lock guards which attribute with a trailing comment on the
+attribute's assignment —
+
+    self._ids: List[str] = []          # guarded-by: _lock
+    self._closed = False               # guarded-by: _lock|_batcher_init_lock
+
+Lock attribute names must start with an underscore.  ``a|b`` means the
+attribute may be touched while holding *either* lock (writers are expected
+to hold all of them — enforce that by construction, e.g. ``close()``).
+
+The checker then rejects any method that reads or writes a guarded
+attribute outside a ``with self.<lock>`` block.  Escapes:
+
+  * ``# unguarded-ok: <reason>`` on the access line (or on the ``def``
+    line to exempt a whole method) — for deliberate racy reads;
+  * ``# requires-lock: <lock>`` on the ``def`` line — the documented
+    "caller holds the lock" contract for internal helpers; the method
+    body is analyzed as if the named lock were held.
+
+Rules:
+  LOCK001  guarded attribute accessed without holding a declared lock
+  LOCK002  guarded-by / requires-lock names a lock the class never creates
+  LOCK003  escape hatch without a reason
+  LOCK004  guarded-by annotation outside any class body (inert)
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Sequence, Set
+
+from .report import (Source, Violation, find_suppression, self_attr,
+                     signature_lines, sort_violations)
+
+# lock lists: underscore-prefixed attribute names, separated by | or ,
+_LOCKS = r"(_[A-Za-z0-9_]+(?:\s*[|,]\s*_[A-Za-z0-9_]+)*)"
+GUARDED_RE = re.compile(rf"#\s*guarded-by:\s*{_LOCKS}")
+REQUIRES_RE = re.compile(rf"#\s*requires-lock:\s*{_LOCKS}")
+
+
+def _lock_names(spec: str) -> Set[str]:
+    return {name.strip() for name in re.split(r"[|,]", spec) if name.strip()}
+
+
+class _ClassInfo:
+    def __init__(self, node: ast.ClassDef):
+        self.node = node
+        self.guarded: Dict[str, Set[str]] = {}   # attr -> locks that guard it
+        self.assigned: Set[str] = set()          # every self.<attr> ever set
+
+
+def _collect_class(src: Source, node: ast.ClassDef) -> _ClassInfo:
+    info = _ClassInfo(node)
+    for sub in ast.walk(node):
+        targets: List[ast.AST] = []
+        if isinstance(sub, ast.Assign):
+            targets = list(sub.targets)
+        elif isinstance(sub, (ast.AnnAssign, ast.AugAssign)):
+            targets = [sub.target]
+        else:
+            continue
+        attrs = [a for a in map(self_attr, targets) if a is not None]
+        if not attrs:
+            continue
+        info.assigned.update(attrs)
+        for lineno in src.span_lines(sub):
+            m = GUARDED_RE.search(src.line(lineno))
+            if m:
+                locks = _lock_names(m.group(1))
+                for attr in attrs:
+                    info.guarded.setdefault(attr, set()).update(locks)
+                break
+    return info
+
+
+class _MethodChecker(ast.NodeVisitor):
+    """Walks one method body tracking which declared locks are lexically
+    held (``with self.<lock>:``) at each guarded-attribute access."""
+
+    def __init__(self, src: Source, cls: _ClassInfo, method: ast.AST,
+                 held: Set[str], violations: List[Violation]):
+        self.src = src
+        self.cls = cls
+        self.method = method
+        self.held = set(held)
+        self.violations = violations
+        self.lock_attrs = set().union(*cls.guarded.values()) \
+            if cls.guarded else set()
+
+    # ------------------------------------------------------------ lock scope
+    def visit_With(self, node: ast.With) -> None:
+        acquired = set()
+        for item in node.items:
+            name = self_attr(item.context_expr)
+            if name in self.lock_attrs and name not in self.held:
+                acquired.add(name)    # re-entrant with: outer scope owns it
+        self.held |= acquired
+        self.generic_visit(node)
+        self.held -= acquired
+
+    # nested defs inherit the lexical lock scope (closures that escape the
+    # block are out of scope for a static checker)
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # --------------------------------------------------------------- accesses
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        attr = self_attr(node)
+        if attr is not None and attr in self.cls.guarded:
+            locks = self.cls.guarded[attr]
+            if not (locks & self.held):
+                self._report_or_suppress(node, attr, locks)
+        self.generic_visit(node)
+
+    def _report_or_suppress(self, node: ast.Attribute, attr: str,
+                            locks: Set[str]) -> None:
+        reason = find_suppression(self.src, list(self.src.span_lines(node)),
+                                  "unguarded")
+        if reason == "":
+            self.violations.append(Violation(
+                "LOCK003", self.src.path, node.lineno,
+                f"'# unguarded-ok:' on access to {attr!r} needs a reason"))
+            return
+        if reason is not None:
+            return
+        want = "|".join(sorted(locks))
+        method = getattr(self.method, "name", "<module>")
+        self.violations.append(Violation(
+            "LOCK001", self.src.path, node.lineno,
+            f"{self.cls.node.name}.{method} touches {attr!r} (guarded-by: "
+            f"{want}) outside 'with self.{next(iter(sorted(locks)))}'"
+            + ("" if len(locks) == 1 else " (any declared lock satisfies)")))
+
+
+def _check_class(src: Source, info: _ClassInfo,
+                 violations: List[Violation]) -> None:
+    if not info.guarded:
+        return
+    # every named lock must actually exist on the class
+    for attr, locks in sorted(info.guarded.items()):
+        for lock in sorted(locks):
+            if lock not in info.assigned:
+                violations.append(Violation(
+                    "LOCK002", src.path, info.node.lineno,
+                    f"{info.node.name}.{attr} is guarded-by {lock!r}, but "
+                    f"the class never assigns self.{lock}"))
+    for method in info.node.body:
+        if not isinstance(method, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if method.name == "__init__":
+            continue     # the object is not yet visible to other threads
+        sig = list(signature_lines(method))
+        reason = find_suppression(src, sig, "unguarded")
+        if reason == "":
+            violations.append(Violation(
+                "LOCK003", src.path, method.lineno,
+                f"'# unguarded-ok:' on {info.node.name}.{method.name} "
+                f"needs a reason"))
+            continue
+        if reason is not None:
+            continue     # whole method exempted
+        held: Set[str] = set()
+        for lineno in sig:
+            m = REQUIRES_RE.search(src.line(lineno))
+            if m:
+                held |= _lock_names(m.group(1))
+        for lock in sorted(held):
+            if lock not in info.assigned:
+                violations.append(Violation(
+                    "LOCK002", src.path, method.lineno,
+                    f"{info.node.name}.{method.name} requires-lock {lock!r}, "
+                    f"but the class never assigns self.{lock}"))
+        checker = _MethodChecker(src, info, method, held, violations)
+        for stmt in method.body:
+            checker.visit(stmt)
+
+
+def check_lock_discipline(paths: Sequence[str]) -> List[Violation]:
+    """Run the lock-discipline analyzer over the given Python files."""
+    violations: List[Violation] = []
+    for path in paths:
+        src = Source.load(path)
+        class_lines: Set[int] = set()
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.ClassDef):
+                class_lines.update(src.span_lines(node))
+                _check_class(src, _collect_class(src, node), violations)
+        # a guarded-by annotation outside any class is dead weight — flag it
+        # so a stray paste can't look like coverage
+        for lineno, line in enumerate(src.lines, start=1):
+            if GUARDED_RE.search(line) and lineno not in class_lines:
+                violations.append(Violation(
+                    "LOCK004", src.path, lineno,
+                    "guarded-by annotation outside a class body has no "
+                    "effect"))
+    return sort_violations(violations)

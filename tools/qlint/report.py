@@ -1,0 +1,132 @@
+"""Shared analyzer plumbing: violations, source loading, suppression.
+
+Every analyzer reports :class:`Violation` records formatted as
+``path:line: RULE message`` so editors and CI logs can jump straight to
+the offending line.  Suppression is always explicit and always carries a
+reason — bare escape hatches are themselves violations.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One analyzer finding, pinned to a file and line."""
+
+    rule: str          # e.g. "LOCK001"
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass
+class Source:
+    """A parsed module: AST + physical lines (for comment conventions)."""
+
+    path: str
+    text: str
+    lines: List[str]
+    tree: ast.Module
+
+    @classmethod
+    def load(cls, path: str) -> "Source":
+        with open(path, "r", encoding="utf-8") as f:
+            text = f.read()
+        return cls(path=path, text=text, lines=text.splitlines(),
+                   tree=ast.parse(text, filename=path))
+
+    def line(self, lineno: int) -> str:
+        """1-indexed physical line ('' when out of range)."""
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def span_lines(self, node: ast.AST) -> range:
+        """1-indexed line range a node covers."""
+        end = getattr(node, "end_lineno", None) or node.lineno
+        return range(node.lineno, end + 1)
+
+
+# One escape-hatch grammar shared by every analyzer: the marker word names
+# the analyzer, the reason is mandatory.
+#   # unguarded-ok: <reason>   (locks)
+#   # pallas-ok: <reason>      (jax/pallas hygiene)
+#   # wire-ok: <reason>        (wire exhaustiveness)
+_SUPPRESS_RES: Dict[str, "re.Pattern[str]"] = {
+    marker: re.compile(rf"#\s*{marker}-ok:(.*)$")
+    for marker in ("unguarded", "pallas", "wire")
+}
+
+
+def suppression(line: str, marker: str) -> Optional[str]:
+    """Returns the escape-hatch reason on this line, '' when the hatch is
+    present but reasonless, or None when there is no hatch at all."""
+    m = _SUPPRESS_RES[marker].search(line)
+    if m is None:
+        return None
+    return m.group(1).strip()
+
+
+def find_suppression(src: Source, linenos: Sequence[int],
+                     marker: str) -> Optional[str]:
+    """First escape hatch found on any of the given lines (see
+    :func:`suppression` for the return convention)."""
+    for n in linenos:
+        reason = suppression(src.line(n), marker)
+        if reason is not None:
+            return reason
+    return None
+
+
+def signature_lines(fn: ast.AST) -> range:
+    """Lines spanned by a def's signature (decorators excluded): where
+    method-level markers like ``# requires-lock:`` live."""
+    first_body = fn.body[0].lineno if getattr(fn, "body", None) else fn.lineno
+    return range(fn.lineno, first_body + 1)
+
+
+def sort_violations(violations: List[Violation]) -> List[Violation]:
+    return sorted(violations, key=lambda v: (v.path, v.line, v.rule))
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jax.jit' for Attribute(Name('jax'), 'jit'), 'jit' for Name('jit')."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def self_attr(node: ast.AST) -> Optional[str]:
+    """'x' when node is ``self.x``, else None."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def const_str_tuple(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """A tuple/list of string constants (e.g. static_argnames), else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str)):
+                return None
+            out.append(elt.value)
+        return tuple(out)
+    return None

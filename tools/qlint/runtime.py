@@ -1,0 +1,249 @@
+"""Runtime twin of the static lock checker: instrumented locks.
+
+:class:`TracedRLock` is a drop-in ``threading.RLock`` replacement that
+feeds a process-wide :class:`LockMonitor`:
+
+  * **lock-order graph** — every time a thread acquires lock B while
+    already holding lock A, the monitor records the edge A→B.  A cycle in
+    this graph (A→B somewhere, B→A somewhere else) is a potential
+    deadlock even if the schedules never collided in this run; the fuzz
+    test fails on any cycle.
+  * **live wait-for detection** — before blocking, an acquirer publishes
+    "waiting for L"; if the owner chain of L leads back to the acquirer,
+    :class:`DeadlockDetected` is raised instead of hanging the test.
+  * **stall accounting** — holds or waits longer than ``stall_after``
+    seconds are recorded (never raised: CI machines wobble) so stress
+    tests can print the worst offenders.
+
+Re-entrant acquires (depth > 0) are bookkeeping-only: they cannot change
+the order graph or block, matching RLock semantics.
+
+Usage::
+
+    monitor = LockMonitor()
+    col._lock = TracedRLock("collection", monitor)   # or instrument_collection
+    ... hammer from threads ...
+    monitor.assert_no_cycles()
+
+The monitor's own ``_mu`` is a plain lock held only for short critical
+sections and never while blocking on a user lock, so the instrumentation
+cannot itself deadlock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Set, Tuple
+
+
+class DeadlockDetected(RuntimeError):
+    """A blocking acquire would complete a wait-for cycle."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Stall:
+    """One hold/wait that exceeded the monitor's stall threshold."""
+
+    kind: str          # "hold" | "wait"
+    lock: str
+    thread: str
+    seconds: float
+
+
+class LockMonitor:
+    """Process-wide collector for a family of :class:`TracedRLock`."""
+
+    def __init__(self, stall_after: float = 1.0):
+        self.stall_after = stall_after
+        self._mu = threading.Lock()
+        # order edges: (held.name, acquired.name) -> first witness
+        self._edges: Dict[Tuple[str, str], str] = {}
+        # live state, keyed by thread ident / lock name
+        self._holding: Dict[int, List[str]] = {}
+        self._waiting: Dict[int, str] = {}
+        self._owner: Dict[str, int] = {}
+        self._stalls: List[Stall] = []
+        self._acquires = 0
+
+    # ------------------------------------------------------------ lock events
+    def on_wait(self, lock: str, reentrant: bool) -> None:
+        """Called before a (possibly) blocking acquire."""
+        me = threading.get_ident()
+        if reentrant:
+            return
+        with self._mu:
+            held = list(self._holding.get(me, ()))
+            for h in held:
+                self._edges.setdefault(
+                    (h, lock), threading.current_thread().name)
+            self._check_wait_cycle(me, lock)
+            self._waiting[me] = lock
+
+    def on_acquired(self, lock: str, reentrant: bool,
+                    waited: float) -> None:
+        me = threading.get_ident()
+        if reentrant:
+            return
+        with self._mu:
+            self._acquires += 1
+            self._waiting.pop(me, None)
+            self._owner[lock] = me
+            self._holding.setdefault(me, []).append(lock)
+            if waited >= self.stall_after:
+                self._stalls.append(Stall(
+                    "wait", lock, threading.current_thread().name, waited))
+
+    def on_released(self, lock: str, reentrant: bool, held: float) -> None:
+        me = threading.get_ident()
+        if reentrant:
+            return
+        with self._mu:
+            stack = self._holding.get(me, [])
+            if lock in stack:
+                stack.remove(lock)
+            if self._owner.get(lock) == me:
+                del self._owner[lock]
+            if held >= self.stall_after:
+                self._stalls.append(Stall(
+                    "hold", lock, threading.current_thread().name, held))
+
+    def _check_wait_cycle(self, me: int, lock: str) -> None:
+        """Follow owner->waiting links from `lock`; raise if they reach me.
+        Caller holds self._mu."""
+        seen: Set[str] = set()
+        current: Optional[str] = lock
+        chain = [lock]
+        while current is not None and current not in seen:
+            seen.add(current)
+            owner = self._owner.get(current)
+            if owner is None:
+                return                      # unowned: we will get it
+            if owner == me:
+                raise DeadlockDetected(
+                    "wait-for cycle: " + " -> ".join(chain)
+                    + f" -> (held by requester {chain[0]!r} waiter)")
+            current = self._waiting.get(owner)
+            if current is not None:
+                chain.append(current)
+
+    # -------------------------------------------------------------- reporting
+    def order_edges(self) -> Dict[Tuple[str, str], str]:
+        with self._mu:
+            return dict(self._edges)
+
+    def order_cycles(self) -> List[List[str]]:
+        """Cycles in the lock-order graph (each as the node list)."""
+        edges = self.order_edges()
+        graph: Dict[str, Set[str]] = {}
+        for (a, b) in edges:
+            graph.setdefault(a, set()).add(b)
+        cycles: List[List[str]] = []
+        # DFS with an explicit path; the graphs here are tiny (a handful of
+        # named locks) so simplicity beats asymptotics
+        def dfs(node: str, path: List[str], on_path: Set[str]) -> None:
+            for nxt in sorted(graph.get(node, ())):
+                if nxt in on_path:
+                    cyc = path[path.index(nxt):] + [nxt]
+                    if not any(set(c) == set(cyc) for c in cycles):
+                        cycles.append(cyc)
+                    continue
+                dfs(nxt, path + [nxt], on_path | {nxt})
+        for start in sorted(graph):
+            dfs(start, [start], {start})
+        return cycles
+
+    def stalls(self) -> List[Stall]:
+        with self._mu:
+            return list(self._stalls)
+
+    @property
+    def acquires(self) -> int:
+        with self._mu:
+            return self._acquires
+
+    def assert_no_cycles(self) -> None:
+        cycles = self.order_cycles()
+        if cycles:
+            lines = [" -> ".join(c) for c in cycles]
+            raise AssertionError(
+                "lock-order cycles (potential deadlocks):\n  "
+                + "\n  ".join(lines))
+
+    def report(self) -> str:
+        edges = self.order_edges()
+        parts = [f"{self.acquires} traced acquires",
+                 f"{len(edges)} order edges"]
+        for (a, b), witness in sorted(edges.items()):
+            parts.append(f"  {a} -> {b}   (first: {witness})")
+        for s in self.stalls():
+            parts.append(f"  stall: {s.kind} {s.lock} by {s.thread} "
+                         f"{s.seconds:.3f}s")
+        return "\n".join(parts)
+
+
+class TracedRLock:
+    """``threading.RLock`` work-alike reporting to a :class:`LockMonitor`."""
+
+    def __init__(self, name: str, monitor: LockMonitor):
+        self.name = name
+        self.monitor = monitor
+        self._inner = threading.RLock()
+        self._depth: Dict[int, int] = {}     # per-thread recursion depth
+        self._since: Dict[int, float] = {}   # outermost-acquire timestamp
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        me = threading.get_ident()
+        reentrant = self._depth.get(me, 0) > 0
+        self.monitor.on_wait(self.name, reentrant)
+        t0 = time.monotonic()
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            self._depth[me] = self._depth.get(me, 0) + 1
+            if not reentrant:
+                self._since[me] = time.monotonic()
+            self.monitor.on_acquired(self.name, reentrant,
+                                     time.monotonic() - t0)
+        elif not reentrant:
+            # failed try-acquire: clear the published wait
+            self.monitor.on_acquired(self.name, False, 0.0)
+            self.monitor.on_released(self.name, False, 0.0)
+        return ok
+
+    def release(self) -> None:
+        me = threading.get_ident()
+        depth = self._depth.get(me, 0)
+        if depth <= 0:
+            raise RuntimeError("release of un-acquired TracedRLock "
+                               + self.name)
+        self._depth[me] = depth - 1
+        outermost = depth == 1
+        held = time.monotonic() - self._since.pop(me, time.monotonic()) \
+            if outermost else 0.0
+        self._inner.release()
+        self.monitor.on_released(self.name, not outermost, held)
+
+    def __enter__(self) -> "TracedRLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+def instrument_collection(col, monitor: LockMonitor) -> None:
+    """Swap a Collection's locks (and its batcher's) for traced ones.
+
+    Call before any concurrent traffic.  Touching ``col.batcher`` first
+    forces the worker to exist while it is still idle-parked on its queue,
+    so swapping ``_state_lock`` is safe.
+    """
+    name = getattr(col, "name", "collection")
+    col._lock = TracedRLock(f"{name}._lock", monitor)
+    col._batcher_init_lock = TracedRLock(
+        f"{name}._batcher_init_lock", monitor)
+    batcher = col.batcher
+    if batcher is not None:
+        batcher._state_lock = TracedRLock(
+            f"{name}.batcher._state_lock", monitor)

@@ -1,0 +1,211 @@
+"""Wire-protocol exhaustiveness checker (rules WIRE001-WIRE005).
+
+The request plane has four legs that must stay in lockstep for every
+operation, or embedded-vs-remote parity silently drifts:
+
+  1. the request dataclass in ``api/requests.py`` (with its ``op`` tag and
+     membership in the ``AnyRequest`` codec union);
+  2. a dispatch case in ``QuantixarService._HANDLERS``
+     (``serving/service.py``);
+  3. an HTTP route in ``serving/http.py`` that builds the dataclass;
+  4. a client call in ``api/client.py`` hitting that route.
+
+This analyzer cross-references all four by AST — adding a request type
+without completing every leg fails ``make lint``.  A deliberately
+transport-less op can carry ``# wire-ok: <reason>`` on its class line to
+waive legs 3 and 4 (the typed service path and ``/v1/rpc`` still serve it).
+
+Rules:
+  WIRE001  request class missing from the AnyRequest union
+  WIRE002  request class has no QuantixarService._HANDLERS entry
+  WIRE003  request class is never built by an HTTP route
+  WIRE004  route path for a request class never referenced by the client
+  WIRE005  escape hatch without a reason
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from .report import Source, Violation, find_suppression, sort_violations
+
+_GROUP_RE = re.compile(r"\([^)]*\)")
+
+
+@dataclasses.dataclass
+class WirePaths:
+    """The four modules whose agreement the checker enforces."""
+
+    requests_py: str
+    service_py: str
+    http_py: str
+    client_py: str
+
+
+@dataclasses.dataclass
+class _RequestClass:
+    name: str
+    op: str
+    lineno: int
+    waived: bool          # wire-ok: HTTP/client legs not required
+    waive_reasonless: bool
+
+
+def _request_classes(src: Source) -> List[_RequestClass]:
+    out = []
+    for node in src.tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        bases = {b.id for b in node.bases if isinstance(b, ast.Name)}
+        if "Request" not in bases:
+            continue
+        op: Optional[str] = None
+        for stmt in node.body:
+            if isinstance(stmt, ast.Assign) \
+                    and any(isinstance(t, ast.Name) and t.id == "op"
+                            for t in stmt.targets) \
+                    and isinstance(stmt.value, ast.Constant):
+                op = stmt.value.value
+        if not isinstance(op, str) or op == "abstract":
+            continue
+        reason = find_suppression(src, [node.lineno], "wire")
+        out.append(_RequestClass(
+            name=node.name, op=op, lineno=node.lineno,
+            waived=reason is not None, waive_reasonless=reason == ""))
+    return out
+
+
+def _union_members(src: Source, union_name: str) -> Set[str]:
+    """Names inside ``AnyRequest = Union[...]``."""
+    for node in src.tree.body:
+        if isinstance(node, ast.Assign) \
+                and any(isinstance(t, ast.Name) and t.id == union_name
+                        for t in node.targets) \
+                and isinstance(node.value, ast.Subscript):
+            sl = node.value.slice
+            elts = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+            return {e.id for e in elts if isinstance(e, ast.Name)}
+    return set()
+
+
+def _rq_refs(node: ast.AST) -> Set[str]:
+    """Every ``rq.<Name>`` referenced under this node."""
+    out = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) \
+                and isinstance(sub.value, ast.Name) and sub.value.id == "rq":
+            out.add(sub.attr)
+    return out
+
+
+def _handler_keys(src: Source) -> Set[str]:
+    """Keys of the ``_HANDLERS`` dict literal in the service module."""
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign):
+            targets = [node.target]
+        else:
+            continue
+        if any(isinstance(t, ast.Name) and t.id == "_HANDLERS"
+               for t in targets) \
+                and isinstance(node.value, ast.Dict):
+            out = set()
+            for key in node.value.keys:
+                if key is not None:
+                    out |= _rq_refs(key)
+            return out
+    return set()
+
+
+def _routes(src: Source) -> List[Tuple[str, Set[str]]]:
+    """(pattern, request classes built) per ``@_route``-decorated builder."""
+    out = []
+    for node in src.tree.body:
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        patterns = []
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call) and isinstance(dec.func, ast.Name) \
+                    and dec.func.id == "_route" and len(dec.args) >= 2 \
+                    and isinstance(dec.args[1], ast.Constant):
+                patterns.append(dec.args[1].value)
+        if not patterns:
+            continue
+        refs = _rq_refs(node)
+        for pattern in patterns:
+            out.append((pattern, refs))
+    return out
+
+
+def _route_discriminator(pattern: str) -> str:
+    """The last static path chunk of a route regex — the string a client
+    implementation cannot avoid spelling to reach the route."""
+    static = pattern.strip("^$")
+    parts = [p for p in _GROUP_RE.split(static) if p]
+    return parts[-1] if parts else static
+
+
+def _string_literals(src: Source) -> str:
+    """All string constants in a module (f-string static parts included),
+    concatenated for substring search."""
+    chunks = []
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            chunks.append(node.value)
+    return "\n".join(chunks)
+
+
+def check_wire_protocol(paths: WirePaths) -> List[Violation]:
+    """Cross-reference the four request-plane legs."""
+    violations: List[Violation] = []
+    rq_src = Source.load(paths.requests_py)
+    service_src = Source.load(paths.service_py)
+    http_src = Source.load(paths.http_py)
+    client_src = Source.load(paths.client_py)
+
+    classes = _request_classes(rq_src)
+    union = _union_members(rq_src, "AnyRequest")
+    handlers = _handler_keys(service_src)
+    routes = _routes(http_src)
+    routed: Dict[str, List[str]] = {}
+    for pattern, refs in routes:
+        for ref in refs:
+            routed.setdefault(ref, []).append(pattern)
+    client_strings = _string_literals(client_src)
+
+    for cls in classes:
+        if cls.waive_reasonless:
+            violations.append(Violation(
+                "WIRE005", rq_src.path, cls.lineno,
+                f"'# wire-ok:' on {cls.name} needs a reason"))
+        if union and cls.name not in union:
+            violations.append(Violation(
+                "WIRE001", rq_src.path, cls.lineno,
+                f"request {cls.name} (op={cls.op!r}) is missing from the "
+                f"AnyRequest union"))
+        if cls.name not in handlers:
+            violations.append(Violation(
+                "WIRE002", service_src.path, 1,
+                f"request {cls.name} (op={cls.op!r}) has no "
+                f"QuantixarService._HANDLERS entry"))
+        if cls.waived:
+            continue
+        patterns = routed.get(cls.name)
+        if not patterns:
+            violations.append(Violation(
+                "WIRE003", http_src.path, 1,
+                f"request {cls.name} (op={cls.op!r}) is never built by an "
+                f"HTTP route"))
+            continue
+        if not any(_route_discriminator(p) in client_strings
+                   for p in patterns):
+            discs = sorted({_route_discriminator(p) for p in patterns})
+            violations.append(Violation(
+                "WIRE004", client_src.path, 1,
+                f"no client call references route path {discs} for request "
+                f"{cls.name} (op={cls.op!r})"))
+    return sort_violations(violations)
