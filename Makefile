@@ -31,15 +31,20 @@ qlint:
 fuzz-smoke:
 	PYTHONPATH=src:. $(PY) -m pytest tests/test_fuzz_concurrency.py -x -q
 
-# full HNSW width x ef sweep -> BENCH_hnsw.json at the repo root
-# (timestamp passed in at the make boundary, not sampled by the writer)
+# full HNSW width x ef sweep, incremental and bulk builders side by side
+# -> BENCH_hnsw.json at the repo root (timestamp passed in at the make
+# boundary, not sampled by the writer); the bulk path must be >=10x
+# faster at recall within 0.02 of incremental
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only table1 \
+		--builder both --min-speedup 10 \
 		--out BENCH_hnsw.json --timestamp $$(date +%s)
 
-# CI-sized sweep with a recall floor: perf PRs can't trade away quality
+# CI-sized sweep with a recall floor + builder-throughput floor: perf PRs
+# can't trade away quality, and the bulk builder can't regress below 5x
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only table1 --fast \
+		--builder both --min-speedup 5 \
 		--out BENCH_hnsw.json --timestamp $$(date +%s) --min-recall 0.9
 
 smoke:

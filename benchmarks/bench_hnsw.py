@@ -29,7 +29,8 @@ from typing import Dict, List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HNSWConfig, bulk_build, exact_knn, recall_at_k
+from repro.core import (HNSWConfig, bulk_build, bulk_build_device, exact_knn,
+                        recall_at_k)
 from repro.core.hnsw_build import build as incremental_build, \
     preprocess_vectors
 from repro.core.hnsw_search import search, to_device
@@ -38,23 +39,49 @@ from repro.data.synthetic import fashion_mnist_like, sift_like
 K = 10
 DEFAULT_WIDTHS = (1, 2, 4)
 
+BUILD_FNS = {"incremental": incremental_build, "bulk": bulk_build_device,
+             "bulk_ref": bulk_build}
+
+
+def expand_builders(builder: str) -> Sequence[str]:
+    """CLI spelling -> builder list ("both" = incremental + bulk rows
+    side by side, the construction-throughput comparison)."""
+    if builder == "both":
+        return ("incremental", "bulk")
+    if builder not in BUILD_FNS:
+        raise ValueError(f"builder {builder!r}; "
+                         f"have {sorted(BUILD_FNS)} or 'both'")
+    return (builder,)
+
 
 def run_dataset(name: str, corpus: np.ndarray, queries: np.ndarray,
                 metric: str = "l2", builder: str = "incremental",
                 ef_values: Sequence[int] = (64, 128),
                 widths: Sequence[int] = DEFAULT_WIDTHS,
                 repeats: int = 3) -> List[Dict]:
-    cfg = HNSWConfig(M=16, ef_construction=100, metric=metric)
-    t0 = time.perf_counter()
-    build_fn = incremental_build if builder == "incremental" else bulk_build
-    packed = build_fn(corpus, cfg)
-    t_build = time.perf_counter() - t0
-
-    g, max_level, dev_metric = to_device(packed)
+    """Sweep one dataset; `builder` may be a single name or "both"
+    (incremental + bulk share the ground truth and search sweep)."""
+    rows: List[Dict] = []
     gt = exact_knn(queries, corpus, K, metric=metric)
     gt_d = np.sort(
         ((preprocess_vectors(queries, metric)[:, None, :]
           - preprocess_vectors(corpus, metric)[gt]) ** 2).sum(-1), axis=1)
+    for one in expand_builders(builder):
+        rows += _run_one_builder(name, corpus, queries, metric, one,
+                                 ef_values, widths, repeats, gt, gt_d)
+    return rows
+
+
+def _run_one_builder(name: str, corpus: np.ndarray, queries: np.ndarray,
+                     metric: str, builder: str, ef_values: Sequence[int],
+                     widths: Sequence[int], repeats: int,
+                     gt: np.ndarray, gt_d: np.ndarray) -> List[Dict]:
+    cfg = HNSWConfig(M=16, ef_construction=100, metric=metric)
+    t0 = time.perf_counter()
+    packed = BUILD_FNS[builder](corpus, cfg)
+    t_build = time.perf_counter() - t0
+
+    g, max_level, dev_metric = to_device(packed)
 
     rows = []
     qn = preprocess_vectors(queries, metric)
@@ -133,6 +160,41 @@ def check_recall_floor(rows: List[Dict], min_recall: float) -> List[str]:
             failures.append(
                 f"{r['dataset']} ef={r['ef']} width={r['width']}: "
                 f"recall {r['recall']:.4f} < floor {min_recall}")
+    return failures
+
+
+def check_builder_floor(rows: List[Dict], min_speedup: float,
+                        recall_slack: float = 0.02) -> List[str]:
+    """Construction-throughput gate for `--builder both` sweeps: per
+    dataset, the bulk build must be at least ``min_speedup``× faster than
+    the incremental build AND every (ef, width) cell's bulk recall must be
+    within ``recall_slack`` of the incremental cell — "faster at equal
+    recall", enforced, so the bulk path cannot regress either axis."""
+    failures = []
+    by_ds: Dict[str, Dict[str, List[Dict]]] = {}
+    for r in rows:
+        by_ds.setdefault(r["dataset"], {}).setdefault(
+            r["builder"], []).append(r)
+    for ds, builders in sorted(by_ds.items()):
+        if "incremental" not in builders or "bulk" not in builders:
+            continue
+        inc_s = builders["incremental"][0]["construction_s"]
+        blk_s = builders["bulk"][0]["construction_s"]
+        speedup = inc_s / max(blk_s, 1e-9)
+        if speedup < min_speedup:
+            failures.append(
+                f"{ds}: bulk construction {blk_s:.2f}s is only "
+                f"{speedup:.2f}x faster than incremental {inc_s:.2f}s "
+                f"(< {min_speedup}x floor)")
+        inc_cells = {(r["ef"], r["width"]): r["recall"]
+                     for r in builders["incremental"]}
+        for r in builders["bulk"]:
+            want = inc_cells.get((r["ef"], r["width"]))
+            if want is not None and r["recall"] < want - recall_slack:
+                failures.append(
+                    f"{ds} ef={r['ef']} width={r['width']}: bulk recall "
+                    f"{r['recall']:.4f} < incremental {want:.4f} - "
+                    f"{recall_slack}")
     return failures
 
 

@@ -30,9 +30,10 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller corpora (CI budget)")
     ap.add_argument("--builder", default=None,
-                    choices=["incremental", "bulk"],
-                    help="HNSW builder for table1 (default: incremental, "
-                         "bulk under --fast)")
+                    choices=["incremental", "bulk", "bulk_ref", "both"],
+                    help="HNSW builder for table1; 'both' sweeps "
+                         "incremental and bulk side by side (default: "
+                         "incremental, bulk under --fast)")
     ap.add_argument("--out", default=None,
                     help="write the table1 sweep as JSON to this path "
                          "(e.g. BENCH_hnsw.json at the repo root)")
@@ -42,6 +43,10 @@ def main() -> None:
     ap.add_argument("--min-recall", type=float, default=None,
                     help="fail (exit 1) if any widest-beam table1 row "
                          "falls below this recall@10 floor")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="with --builder both: fail (exit 1) unless the "
+                         "bulk build is at least this many times faster "
+                         "than incremental at recall within 0.02")
     args = ap.parse_args()
 
     timestamp = args.timestamp if args.timestamp is not None else time.time()
@@ -60,7 +65,9 @@ def main() -> None:
                                     meta={"fast": args.fast, **scale})
             print(f"# wrote {args.out}")
         if args.min_recall is not None:
-            failures = bench_hnsw.check_recall_floor(rows, args.min_recall)
+            failures += bench_hnsw.check_recall_floor(rows, args.min_recall)
+        if args.min_speedup is not None:
+            failures += bench_hnsw.check_builder_floor(rows, args.min_speedup)
     if args.only in ("all", "quant"):
         from . import bench_quant
         bench_quant.main(n=8_000 if args.fast else 20_000)

@@ -23,6 +23,7 @@ from ..core.sparse import TokenizerConfig
 
 INDEXES = ("hnsw", "flat", "ivf")
 QUANTIZATIONS = ("none", "pq", "bq")
+BUILDERS = ("incremental", "bulk", "bulk_ref")
 
 # column names the Collection layer reserves for itself
 RESERVED_NAMES = ("id", "score", "vector")
@@ -189,11 +190,15 @@ class VectorField:
     ef_search: int = 64
     rescore: bool = True
     rescore_multiplier: int = 4
-    builder: str = "bulk"          # API default: fast bulk HNSW construction
+    # API default: the device-parallel bulk HNSW constructor; "incremental"
+    # is the paper-faithful serial builder, "bulk_ref" the numpy reference
+    builder: str = "bulk"
 
     def __post_init__(self) -> None:
         if not isinstance(self.dim, int) or self.dim <= 0:
             raise SchemaError(f"dim must be a positive int, got {self.dim!r}")
+        if self.builder not in BUILDERS:
+            raise SchemaError(f"builder {self.builder!r}; have {BUILDERS}")
         if self.metric not in available_metrics():
             raise SchemaError(f"metric {self.metric!r}; "
                               f"have {sorted(available_metrics())}")

@@ -6,6 +6,7 @@ from .distances import (available_metrics, brute_force_topk, get_metric,
 from .engine import EngineConfig, QuantixarEngine
 from .flat import FlatIndex, flat_search, merge_topk
 from .hnsw_build import HNSWConfig, PackedHNSW, build, bulk_build, exact_knn
+from .hnsw_bulk import bulk_build_device
 from .hnsw_search import HNSWGraph, recall_at_k, search, to_device
 from .metadata import And, Filter, MetadataStore, Not, Or, Predicate
 from .bq import BinaryQuantizer, BQConfig

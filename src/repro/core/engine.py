@@ -39,7 +39,9 @@ from . import pq as pq_mod
 from .distances import get_metric
 from .executor import AnnParams
 from .flat import flat_search
-from .hnsw_build import HNSWConfig, PackedHNSW, build, bulk_build, preprocess_vectors
+from .hnsw_build import (HNSWConfig, PackedHNSW, ProgressFn, build,
+                         bulk_build, preprocess_vectors)
+from .hnsw_bulk import bulk_build_device
 from .ivf import IVFConfig, IVFIndex
 from .hnsw_search import to_device, search as hnsw_search
 from .metadata import Filter, MetadataStore
@@ -57,7 +59,10 @@ class EngineConfig:
     bq: bq_mod.BQConfig = dataclasses.field(default_factory=bq_mod.BQConfig)
     hnsw: HNSWConfig = dataclasses.field(default_factory=HNSWConfig)
     ivf: IVFConfig = dataclasses.field(default_factory=IVFConfig)
-    builder: str = "incremental"         # "incremental" (faithful) | "bulk"
+    # "incremental" (faithful one-at-a-time inserts) | "bulk" (device-
+    # parallel batched build, core/hnsw_bulk.py) | "bulk_ref" (the slow
+    # numpy exactness reference)
+    builder: str = "incremental"
     ef_search: int = 64
     # wide-beam candidates popped per HNSW iteration; None defers to
     # hnsw.expansion_width (per-query override rides search())
@@ -75,6 +80,8 @@ class EngineConfig:
             "cosine" if self.metric == "cosine" else "l2"))
         if self.quantization not in ("none", "pq", "bq"):
             raise ValueError(f"quantization {self.quantization!r}")
+        if self.builder not in ("incremental", "bulk", "bulk_ref"):
+            raise ValueError(f"builder {self.builder!r}")
         # HNSW metric follows the engine metric
         self.hnsw = dataclasses.replace(self.hnsw, metric=self.metric)
 
@@ -175,12 +182,16 @@ class QuantixarEngine:
         return None
 
     # ----------------------------------------------------------------- build
-    def build(self, seed: int = 0) -> None:
+    def build(self, seed: int = 0,
+              progress: Optional[ProgressFn] = None) -> None:
         """Train quantizers + build the index over everything inserted so far.
 
         This is the full O(N) path — retrains codebooks and rebuilds the
         graph.  Post-build inserts do *not* re-enter it; they ride the delta
         segment until `seal()` folds them (encode-only, no retraining).
+        ``progress`` is an optional ``(phase, done, total)`` callback
+        threaded through to the graph builder (serve layers report build
+        progress without builders writing to stdout).
         """
         t0 = time.perf_counter()
         cfg = self.config
@@ -204,12 +215,13 @@ class QuantixarEngine:
             self._codes = None
 
         self._ivf = None                    # full build retrains coarse centroids
-        self._build_index(raw, seed)
+        self._build_index(raw, seed, progress=progress)
         self._mark_sealed()
         self._dirty = False
         self.build_seconds = time.perf_counter() - t0
 
-    def seal(self, seed: int = 0) -> bool:
+    def seal(self, seed: int = 0,
+             progress: Optional[ProgressFn] = None) -> bool:
         """Fold the delta segment into a new sealed segment.
 
         Codebooks are reused (the delta rows were already encoded at insert),
@@ -220,12 +232,12 @@ class QuantixarEngine:
         if self._dirty or self._delta is None:
             if self._n == 0:
                 return False                # nothing inserted yet
-            self.build(seed)                # never built: full train + build
+            self.build(seed, progress=progress)  # never built: train + build
             return True
         if len(self._delta) == 0:
             return False
         t0 = time.perf_counter()
-        self._build_index(self.vectors, seed)
+        self._build_index(self.vectors, seed, progress=progress)
         self._mark_sealed()
         self.seals += 1
         self.build_seconds = time.perf_counter() - t0
@@ -236,7 +248,8 @@ class QuantixarEngine:
         self._delta = DeltaSegment(start=self._n, dim=self.config.dim)
         self._delta_cache = None
 
-    def _build_index(self, raw: np.ndarray, seed: int) -> None:
+    def _build_index(self, raw: np.ndarray, seed: int,
+                     progress: Optional[ProgressFn] = None) -> None:
         """(Re)build the sealed index structure over `raw` using whatever
         quantizers/codes currently exist — trains nothing except an IVF
         coarse quantizer that does not exist yet."""
@@ -244,8 +257,9 @@ class QuantixarEngine:
         if cfg.index == "hnsw":
             eff, eff_metric = self._effective_vectors()
             hnsw_cfg = dataclasses.replace(cfg.hnsw, metric=eff_metric)
-            builder = bulk_build if cfg.builder == "bulk" else build
-            self._packed = builder(eff, hnsw_cfg)
+            builder = {"incremental": build, "bulk": bulk_build_device,
+                       "bulk_ref": bulk_build}[cfg.builder]
+            self._packed = builder(eff, hnsw_cfg, progress=progress)
             self._device_graph = self._to_device_graph()
         elif cfg.index == "ivf":
             # IVF-PQ scans probed lists over reconstructions (the ADC
@@ -680,8 +694,11 @@ class QuantixarEngine:
                "index_builds": self.index_builds,
                "quantizer_trains": self.quantizer_trains,
                "seals": self.seals}
+        if self.config.index == "hnsw":
+            out["builder"] = self.config.builder
         if self._packed is not None:
             out.update(self._packed.degree_stats())
+            out.update(self._packed.build_info)
         if self._ivf is not None and self._ivf.list_sizes is not None:
             sizes = np.asarray(self._ivf.list_sizes)
             out["ivf_lists"] = int(sizes.shape[0])

@@ -30,12 +30,18 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import logging
 import math
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 PAD = -1  # padding sentinel in adjacency rows
+
+logger = logging.getLogger(__name__)
+
+# optional build-progress callback: (phase, done, total) -> None
+ProgressFn = Callable[[str, int, int], None]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,11 +57,33 @@ class HNSWConfig:
     # (1 == classic single-pop traversal); per-query override rides the
     # engine/API search path
     expansion_width: int = 4
+    # --- device bulk-builder knobs (core/hnsw_bulk.py) ---
+    bulk_mode: str = "auto"        # "auto" | "level" | "coarse"
+    build_batch: int = 1024        # nodes per level-wise insert step
+    ef_build: Optional[int] = None  # construction beam (None -> ef_construction)
+    coarse_threshold: int = 1024   # auto: two-phase coarse path at n >= this
+    coarse_cluster: int = 8192     # target rows per coarse k-means cluster
+    #   (single global-kNN cluster up to ~12k rows — chunked GEMM keeps the
+    #   quadratic self-join cheap there, and skipping k-means + boundary
+    #   stitching is both faster and higher-recall at that scale)
+    stitch_frac: float = 0.1       # fraction of boundary nodes beam-stitched
 
     def __post_init__(self):
         if self.expansion_width < 1:
             raise ValueError(
                 f"expansion_width must be >= 1, got {self.expansion_width}")
+        if self.bulk_mode not in ("auto", "level", "coarse"):
+            raise ValueError(f"bulk_mode must be auto|level|coarse, "
+                             f"got {self.bulk_mode!r}")
+        if self.build_batch < 1:
+            raise ValueError(
+                f"build_batch must be >= 1, got {self.build_batch}")
+        if self.coarse_cluster < 1:
+            raise ValueError(
+                f"coarse_cluster must be >= 1, got {self.coarse_cluster}")
+        if not 0.0 <= self.stitch_frac <= 1.0:
+            raise ValueError(
+                f"stitch_frac must be in [0, 1], got {self.stitch_frac}")
 
     @property
     def m0(self) -> int:
@@ -83,6 +111,9 @@ class PackedHNSW:
     entry_global: int
     entry_upper: int
     max_level: int
+    # builder observability (mode, batch/cluster/stitch counters); not
+    # serialized — checkpoints restore it empty
+    build_info: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     @property
     def n(self) -> int:
@@ -308,16 +339,20 @@ def _pack(builder: _GraphBuilder) -> PackedHNSW:
 
 def build(vectors: np.ndarray, config: HNSWConfig = HNSWConfig(),
           insert_order: Optional[np.ndarray] = None,
-          progress_every: int = 0) -> PackedHNSW:
+          progress: Optional[ProgressFn] = None) -> PackedHNSW:
     """Faithful incremental HNSW build."""
     vecs = preprocess_vectors(vectors, config.metric)
     b = _GraphBuilder(config, vecs)
     order = (np.arange(b.n) if insert_order is None
              else np.asarray(insert_order, dtype=np.int64))
+    report_every = max(1, b.n // 20)
     for i, idx in enumerate(order):
         b.insert(int(idx))
-        if progress_every and (i + 1) % progress_every == 0:  # pragma: no cover
-            print(f"  hnsw build: {i + 1}/{b.n}")
+        done = i + 1
+        if done % report_every == 0 or done == b.n:
+            logger.debug("incremental build: %d/%d inserted", done, b.n)
+            if progress is not None:
+                progress("insert", done, b.n)
     return _pack(b)
 
 
@@ -327,7 +362,8 @@ def build(vectors: np.ndarray, config: HNSWConfig = HNSWConfig(),
 
 def bulk_build(vectors: np.ndarray, config: HNSWConfig = HNSWConfig(),
                knn_indices: Optional[np.ndarray] = None,
-               chunk: int = 4096) -> PackedHNSW:
+               chunk: int = 4096,
+               progress: Optional[ProgressFn] = None) -> PackedHNSW:
     """Build the packed structure from an exact kNN graph (one GEMM per chunk).
 
     Level structure is sampled with the same geometric distribution; layer-l
@@ -357,8 +393,13 @@ def bulk_build(vectors: np.ndarray, config: HNSWConfig = HNSWConfig(),
     dist = make_dist_fn(vecs, cfg.metric)
 
     # base layer: heuristic-prune each node's kNN candidates to m0
+    report_every = max(1, n // 10)
     adj0 = np.full((n, cfg.m0), PAD, dtype=np.int32)
     for i in range(n):
+        if (i + 1) % report_every == 0 or i + 1 == n:
+            logger.debug("bulk_ref prune: %d/%d", i + 1, n)
+            if progress is not None:
+                progress("prune", i + 1, n)
         cand_ids = np.unique(np.concatenate(
             [knn_indices[i], rand_cands[i]]))
         cand_ids = cand_ids[cand_ids != i]
@@ -447,17 +488,55 @@ def exact_knn(queries: np.ndarray, corpus: np.ndarray, k: int,
     """Host-side exact kNN ids (chunked GEMM); ground truth for recall tests."""
     q = preprocess_vectors(queries, metric)
     x = preprocess_vectors(corpus, metric)
+    return knn_ids_dists(q, x, k, metric=metric, chunk=chunk)[0]
+
+
+def knn_ids_dists(q: np.ndarray, x: np.ndarray, k: int, metric: str,
+                  chunk: int = 4096,
+                  corpus_chunk: Optional[int] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact kNN over *preprocessed* vectors, chunked on BOTH axes.
+
+    Never materializes more than a (chunk, corpus_chunk) distance block, so
+    the self-join survives 100k+ row corpora where the old single-axis
+    chunking allocated a full (chunk, N) row panel.  Returns (ids, dists)
+    sorted ascending by raw score (squared L2 / negated dot).
+    """
     n = x.shape[0]
-    out = np.zeros((q.shape[0], k), dtype=np.int32)
-    xx = (x * x).sum(1) if metric == "l2" else None
-    for lo in range(0, q.shape[0], chunk):
+    k = min(k, n)
+    if corpus_chunk is None:
+        # bound the block to ~16M floats (64 MB) regardless of chunk size
+        corpus_chunk = max(1024, (1 << 24) // max(chunk, 1))
+    nq = q.shape[0]
+    out_i = np.zeros((nq, k), dtype=np.int32)
+    out_d = np.zeros((nq, k), dtype=np.float32)
+    xx_all = (x * x).sum(1) if metric == "l2" else None
+    for lo in range(0, nq, chunk):
         qc = q[lo: lo + chunk]
-        if metric == "l2":
-            d = ((qc * qc).sum(1)[:, None] + xx[None, :] - 2.0 * qc @ x.T)
-        else:
-            d = -(qc @ x.T)
-        idx = np.argpartition(d, min(k, n - 1), axis=1)[:, :k]
-        dd = np.take_along_axis(d, idx, axis=1)
-        out[lo: lo + chunk] = np.take_along_axis(
-            idx, np.argsort(dd, axis=1), axis=1)
-    return out
+        qq = (qc * qc).sum(1)[:, None] if metric == "l2" else None
+        best_d = np.full((qc.shape[0], k), np.inf, dtype=np.float32)
+        best_i = np.full((qc.shape[0], k), PAD, dtype=np.int32)
+        for clo in range(0, n, corpus_chunk):
+            xc = x[clo: clo + corpus_chunk]
+            if metric == "l2":
+                d = qq + xx_all[clo: clo + corpus_chunk][None, :] \
+                    - 2.0 * qc @ xc.T
+            else:
+                d = -(qc @ xc.T)
+            kk = min(k, d.shape[1])
+            idx = np.argpartition(d, kk - 1, axis=1)[:, :kk] \
+                if kk < d.shape[1] else np.broadcast_to(
+                    np.arange(d.shape[1], dtype=np.int64), d.shape)
+            dd = np.take_along_axis(d, idx, axis=1)
+            cat_d = np.concatenate([best_d, dd.astype(np.float32)], axis=1)
+            cat_i = np.concatenate(
+                [best_i, (idx + clo).astype(np.int32)], axis=1)
+            sel = np.argpartition(cat_d, k - 1, axis=1)[:, :k] \
+                if k < cat_d.shape[1] else np.broadcast_to(
+                    np.arange(cat_d.shape[1], dtype=np.int64), cat_d.shape)
+            best_d = np.take_along_axis(cat_d, sel, axis=1)
+            best_i = np.take_along_axis(cat_i, sel, axis=1)
+        order = np.argsort(best_d, axis=1, kind="stable")
+        out_d[lo: lo + chunk] = np.take_along_axis(best_d, order, axis=1)
+        out_i[lo: lo + chunk] = np.take_along_axis(best_i, order, axis=1)
+    return out_i, out_d

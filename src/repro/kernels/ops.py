@@ -18,6 +18,7 @@ import jax
 from . import ref
 from .beam_gather import (beam_gather_adc_kernel, beam_gather_hamming_kernel,
                           beam_gather_kernel)
+from .bulk_prune import pair_gather_kernel
 from .hamming import hamming_kernel
 from .l2 import l2_distance_kernel
 from .pq_adc import pq_adc_kernel
@@ -84,6 +85,20 @@ def beam_gather_distances(q: Array, ids: Array, corpus: Array, *,
             return ref.beam_gather_l2_ref(q, ids, corpus)
         return ref.beam_gather_dot_ref(q, ids, corpus)
     return beam_gather_kernel(q, ids, corpus, mode=mode,
+                              interpret=_interpret(), **tiles)
+
+
+def pair_gather_distances(ids: Array, corpus: Array, *,
+                          mode: str = "l2",
+                          force_ref: Optional[bool] = None,
+                          **tiles) -> Array:
+    """ids (C,) × corpus (N, D) -> (C, C) float32 pairwise distances
+    among the gathered rows (l2 | dot) — the bulk-prune pair matrix."""
+    if _use_ref(force_ref):
+        if mode == "l2":
+            return ref.pair_gather_l2_ref(ids, corpus)
+        return ref.pair_gather_dot_ref(ids, corpus)
+    return pair_gather_kernel(ids, corpus, mode=mode,
                               interpret=_interpret(), **tiles)
 
 

@@ -84,6 +84,24 @@ def beam_gather_hamming_ref(q_code: Array, ids: Array, codes: Array) -> Array:
     return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
 
 
+def pair_gather_l2_ref(ids: Array, corpus: Array) -> Array:
+    """Fused gather + pairwise squared L2: ids (C,) × corpus (N, D) ->
+    (C, C).  The Alg-4 bulk prune consults row j to test whether candidate
+    j is closer to the query than to any already-selected candidate.
+    Norm-expansion form (never materializes a (C, C, D) diff tensor — this
+    oracle runs under vmap over prune batches on the CPU fallback path)."""
+    rows = corpus[ids]                     # (C, D)
+    g = rows @ rows.T
+    nn = jnp.sum(rows * rows, axis=-1)
+    return jnp.maximum(nn[:, None] + nn[None, :] - 2.0 * g, 0.0)
+
+
+def pair_gather_dot_ref(ids: Array, corpus: Array) -> Array:
+    """Fused gather + pairwise negated inner product -> (C, C)."""
+    rows = corpus[ids]
+    return -(rows @ rows.T)
+
+
 def slstm_sequence_ref(gates_x: Array, r: Array, b: Array,
                        n_heads: int) -> Array:
     """Stabilised exp-gate sLSTM over a sequence (scan of the model cell).
