@@ -57,8 +57,12 @@ serve-smoke:
 serve:
 	PYTHONPATH=src $(PY) -m repro.launch.serve --serve --port 6333
 
+# shard-count sweep with scaling gates: sharded recall must equal
+# single-shard recall (exact merge) and QPS at 4 shards must hold vs 1
 bench-serve:
-	PYTHONPATH=src $(PY) benchmarks/bench_serve.py
+	PYTHONPATH=src $(PY) benchmarks/bench_serve.py \
+		--n 128000 --dim 64 --index flat --requests 300 \
+		--concurrency 12 --shards 1,2,4 --gate
 
 # single-stage vs coarse-to-fine plan sweep -> BENCH_query.json
 bench-query:

@@ -7,8 +7,11 @@ upsert, fluent filtered queries, quantized collections with rescore,
 delete/tombstone + compact, Database save/load persistence, client mode
 (the same fluent query over the embedded HTTP server via QuantixarClient),
 declarative query plans (coarse-to-fine `.stages()`, prefetch + RRF
-fusion, filtered `count()`, and `.explain()` introspection), and hybrid
-search (BM25 keyword via `TextField` + `.text()`, fused with dense ANN).
+fusion, filtered `count()`, and `.explain()` introspection), hybrid
+search (BM25 keyword via `TextField` + `.text()`, fused with dense ANN),
+and sharded serving (`shards=N` hash-partitions rows across in-process
+engine shards with an exact scatter-gather merge, live `rebalance()`,
+and per-shard stats).
 """
 
 import os
@@ -199,6 +202,36 @@ def main():
     wire = (remote_docs.query(queries[0]).text("tag3 fox").top_k(5).run())
     print(f"hybrid wire == embedded hits: "
           f"{[h.id for h in wire] == [h.id for h in hybrid.run()]}")
+    server.shutdown(close_service=False)
+    db.close()
+
+    # 9. Sharded serving: hash-partitioned scatter-gather -------------------
+    # shards=N builds a ShardedCollection behind the same API: rows
+    # hash-partition by string id across N in-process engine shards
+    # (replicated `replicas` times), every query scatters to all shards and
+    # exact-merges the global top-k — the SAME hits as one engine, embedded
+    # or over the wire.  rebalance() re-partitions live via per-shard
+    # snapshots; shard_stats() shows the layout.
+    db = Database()
+    single = db.create_collection(name="single",
+                                  vector=VectorField(dim=DIM, index="flat"))
+    sharded = db.create_collection(
+        name="sharded", vector=VectorField(dim=DIM, index="flat"),
+        shards=3, replicas=2)
+    single.upsert(ids, corpus)
+    sharded.upsert(ids, corpus)
+    want = [h.id for h in single.query(queries[0]).top_k(K).run()]
+    got = [h.id for h in sharded.query(queries[0]).top_k(K).run()]
+    print(f"sharded (3 shards x 2 replicas) == single-engine hits: "
+          f"{got == want}")
+    info = sharded.rebalance(shards=4, replicas=1)
+    got = [h.id for h in sharded.query(queries[0]).top_k(K).run()]
+    print(f"rebalanced 3x2 -> {info['shards']}x{info['replicas']} in "
+          f"{info['seconds']:.2f}s; hits still identical: {got == want}")
+    server = QuantixarHTTPServer(QuantixarService(db)).start()
+    remote_sh = QuantixarClient(server.url).collection("sharded")
+    layout = [(s["shard"], s["rows"]) for s in remote_sh.shard_stats()]
+    print(f"wire shard layout (shard, rows): {layout}")
     server.shutdown(close_service=False)
     db.close()
 

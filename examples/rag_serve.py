@@ -1,17 +1,18 @@
-"""Retrieval-augmented serving: an LM backbone embeds documents, a Quantixar
-collection indexes them, and declarative prefetch+RRF query plans retrieve
+"""Retrieval-augmented serving: an LM backbone embeds documents, a sharded
+Quantixar collection indexes them, and declarative query plans retrieve
 before decode.
 
     PYTHONPATH=src python examples/rag_serve.py
 
 This is the combined-system story (DESIGN.md §5): the vector database is the
 retrieval layer for any assigned architecture; here the reduced qwen2 family
-config is the embedder AND the generator.  Documents live in ONE collection
-under stable string ids ("doc-<i>") with a `shard` keyword payload; each
-retrieval is a single declarative plan — one prefetch sub-query per shard,
-fused with reciprocal-rank fusion — so the fan-out/merge that used to be
-hand-rolled (`QuorumFanout`) is now an inspectable `QueryPlan` the server
-could execute over the wire unchanged.
+config is the embedder AND the generator.  Documents live in ONE
+`ShardedCollection` (`shards=4`) under stable string ids ("doc-<i>"): rows
+hash-partition across in-process engine shards, every query plan scatters to
+all shards and exact-merges the global top-k, and the shard layout that used
+to be hand-rolled (a `shard` keyword payload plus one prefetch sub-query per
+shard, RRF-fused) is now the collection's own routing — the same plan runs
+unchanged on one shard or eight, embedded or over the wire.
 """
 
 import os
@@ -24,7 +25,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.api import Database, KeywordField, VectorField  # noqa: E402
+from repro.api import Database, VectorField  # noqa: E402
 from repro.configs import get_smoke_config  # noqa: E402
 from repro.data.synthetic import zipf_tokens  # noqa: E402
 from repro.models import init_train_state, make_serve_step  # noqa: E402
@@ -51,23 +52,14 @@ def main():
     emb = np.asarray(embed(jnp.asarray(docs)), dtype=np.float32)
     dim = emb.shape[1]
 
-    # 2. one collection, shard-tagged payloads: the shard layout that used
-    #    to be N separate collections is now a keyword field a query plan
-    #    can address per-prefetch
+    # 2. one sharded collection: rows hash-partition by id across N_SHARDS
+    #    engine shards, searches scatter-gather with an exact global merge —
+    #    no per-shard payload tags or manual prefetch fan-out needed
     db = Database()
     col = db.create_collection(
         name="docs", vector=VectorField(dim=dim, index="flat"),
-        fields=(KeywordField("shard"),))
-    col.upsert([f"doc-{i}" for i in range(N_DOCS)], emb,
-               [{"shard": f"s{i % N_SHARDS}"} for i in range(N_DOCS)])
-
-    def retrieval_query(q_vec, k=3):
-        """One declarative plan: a prefetch sub-query per shard, fused with
-        reciprocal-rank fusion (RRF) into a single top-k."""
-        q = col.query(q_vec).top_k(k)
-        for s in range(N_SHARDS):
-            q = q.prefetch(shard=f"s{s}")
-        return q.fuse("rrf")
+        shards=N_SHARDS)
+    col.upsert([f"doc-{i}" for i in range(N_DOCS)], emb)
 
     # 3. retrieval-augmented decode: retrieve nearest doc, prepend, generate
     serve = jax.jit(make_serve_step(cfg))
@@ -75,11 +67,14 @@ def main():
     q_emb = np.asarray(embed(jnp.asarray(queries)), dtype=np.float32)
 
     t0 = time.perf_counter()
-    retrieved = [retrieval_query(q).run() for q in q_emb]
+    retrieved = [col.query(q).top_k(3).run() for q in q_emb]
     print(f"retrieved top-3 docs for 8 queries in "
           f"{time.perf_counter() - t0:.2f}s "
-          f"(prefetch x{N_SHARDS} shards, RRF-fused)")
-    print(f"retrieval plan: {retrieval_query(q_emb[0]).explain()}")
+          f"(scatter-gather across {col.num_shards} shards)")
+    explain = col.query(q_emb[0]).top_k(3).explain()
+    print(f"retrieval plan: {explain}")
+    rows = [f"{s['shard']}: {s['rows']} rows" for s in col.shard_stats()]
+    print(f"shard layout: {', '.join(rows)}")
 
     # prefill query + best doc, then greedy-decode 8 tokens
     best = np.array([int(hits[0].id.split("-")[1]) for hits in retrieved])

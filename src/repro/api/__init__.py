@@ -34,6 +34,7 @@ filtered query builder routed through the serving batcher, and the versioned
 wire protocol (`repro.api.requests`) + HTTP client for the service plane.
 """
 
+from ..cluster.sharded import ShardedCollection, ShardUnavailable
 from ..core.metadata import And, Filter, Not, Or, Predicate
 from .client import QuantixarClient, RemoteCollection
 from .collection import (Collection, CollectionClosed, Entity,
@@ -52,7 +53,7 @@ from .schema import (BatcherConfig, BoolField, CollectionSchema, KeywordField,
 __all__ = [
     "And", "Filter", "Not", "Or", "Predicate",
     "Collection", "CollectionClosed", "Entity", "Database", "Hit", "Query",
-    "QueryRetriesExhausted",
+    "QueryRetriesExhausted", "ShardedCollection", "ShardUnavailable",
     "AnnStage", "FusionStage", "PlanExplain", "PrefetchStage", "QueryPlan",
     "RescoreStage", "SparseStage", "plan_from_dict", "plan_to_dict",
     "QuantixarClient", "RemoteCollection",

@@ -139,16 +139,22 @@ class QuantixarClient:
             name: Optional[str] = None,
             vector: Optional[VectorField] = None,
             fields: Sequence[MetadataField] = (),
-            batcher: Optional[BatcherConfig] = None) -> "RemoteCollection":
+            batcher: Optional[BatcherConfig] = None,
+            shards: int = 1,
+            replicas: int = 1) -> "RemoteCollection":
         if schema is None:
             if name is None or vector is None:
                 raise SchemaError(
                     "pass a CollectionSchema or name= and vector=")
             schema = CollectionSchema(
                 name=name, vector=vector, fields=tuple(fields),
-                batcher=batcher)
-        elif batcher is not None:      # parity with Database.create_collection
-            schema = dataclasses.replace(schema, batcher=batcher)
+                batcher=batcher, shards=shards, replicas=replicas)
+        else:                          # parity with Database.create_collection
+            if batcher is not None:
+                schema = dataclasses.replace(schema, batcher=batcher)
+            if shards != 1 or replicas != 1:
+                schema = dataclasses.replace(schema, shards=shards,
+                                             replicas=replicas)
         result = self._call("POST", "/v1/collections",
                             {"schema": schema.to_dict()})
         return RemoteCollection(
@@ -230,9 +236,28 @@ class RemoteCollection:
                                     {"ids": ids})
         return int(result["deleted"])
 
-    def compact(self) -> int:
-        result = self._client._call("POST", self._path("/compact"), {})
+    def compact(self, shard: Optional[int] = None) -> int:
+        body: Dict[str, Any] = {} if shard is None else {"shard": shard}
+        result = self._client._call("POST", self._path("/compact"), body)
         return int(result["reclaimed"])
+
+    def rebalance(self, shards: Optional[int] = None,
+                  replicas: Optional[int] = None) -> Dict[str, Any]:
+        """Re-shard / re-replicate a sharded collection server-side
+        (snapshot-based move; see `ShardedCollection.rebalance`)."""
+        body: Dict[str, Any] = {}
+        if shards is not None:
+            body["shards"] = shards
+        if replicas is not None:
+            body["replicas"] = replicas
+        return dict(self._client._call("POST", self._path("/rebalance"),
+                                       body))
+
+    def shard_stats(self) -> List[Dict[str, Any]]:
+        """Per-shard rows/tombstones/queue-depth (single-shard collections
+        report one pseudo-shard)."""
+        return list(self._client._call("GET",
+                                       self._path("/shards"))["shards"])
 
     # ----------------------------------------------------------------- reads
     def get(self, id: str) -> Optional[Entity]:

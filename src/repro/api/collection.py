@@ -110,6 +110,15 @@ class Collection:
         with self._lock:
             return id in self._row_of
 
+    @property
+    def epoch(self) -> int:
+        """Row-numbering generation: bumped by every `compact()` that drops
+        tombstones.  Callers that translate engine rows outside the lock
+        (the batcher path, shard scatter-gather) snapshot this before the
+        search and re-check it before trusting the row numbers."""
+        with self._lock:
+            return self._epoch
+
     def ids(self) -> List[str]:
         """Live ids in insertion order."""
         with self._lock:
@@ -173,6 +182,15 @@ class Collection:
                     n += 1
             self._mask = None
         return n
+
+    def seal(self) -> None:
+        """Fold the engine's delta segment into the sealed index and seal
+        every sparse index — `compact()`'s no-tombstone fast path, exposed
+        so shard owners can merge segments without a row renumber."""
+        with self._lock:
+            self._engine.seal()
+            for index in self._sparse.values():
+                index.seal()
 
     def compact(self) -> int:
         """Rebuild the engine over live rows only (drops tombstones, restores
@@ -314,11 +332,13 @@ class Collection:
                                        params=params)
 
     def _sparse_search(self, field: str, text: str, k: int,
-                       flt: Optional[Filter] = None
+                       flt: Optional[Filter] = None, stats=None
                        ) -> Tuple[np.ndarray, np.ndarray]:
         """One masked BM25 pass over a text field's inverted index — the
         sparse twin of `_engine_search`.  Returns (1, k) padded candidate
-        arrays whose distances are negated BM25 scores (lower = better)."""
+        arrays whose distances are negated BM25 scores (lower = better).
+        `stats` substitutes shard-aggregated corpus statistics so a
+        scattered search scores with global IDF/norms, not local ones."""
         with self._lock:
             index = self._sparse.get(field)
             if index is None:       # validate_plan resolves fields first
@@ -328,8 +348,27 @@ class Collection:
             if flt is not None:
                 fmask = self._engine.metadata.evaluate(flt)
                 mask = fmask if mask is None else (mask & fmask)
-            d, rows = index.search(text, k, mask=mask)
+            d, rows = index.search(text, k, mask=mask, stats=stats)
             return d[None, :], rows[None, :]
+
+    def _sparse_term_stats(self, field: str, text: str):
+        """Local corpus statistics `(docs_with_text, total_tokens, df)` for
+        the query's tokens — the gather leg of distributed BM25
+        (`CorpusStats.aggregate` sums these across shards)."""
+        with self._lock:
+            index = self._sparse.get(field)
+            if index is None:
+                raise SchemaError(f"collection {self.name!r} has no text "
+                                  f"field {field!r}")
+            return index.term_stats(index.config.tokenize(text))
+
+    def _rescore_local(self, queries: np.ndarray, rows: np.ndarray, k: int
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact-rescore a candidate row set against full-precision vectors
+        (tombstones masked) — the per-shard leg of a scattered rescore."""
+        with self._lock:
+            return self._engine.exact_rescore(queries, rows, k,
+                                              mask=self._live_mask())
 
     def _execute_direct(self, plan: QueryPlan,  # requires-lock: _lock
                         deadline: Optional[float] = None) -> ExecResult:
@@ -392,6 +431,30 @@ class Collection:
                     vector=(self._engine.vectors[row].copy()
                             if include_vector else None)))
         return hits
+
+    def hits_at(self, d: np.ndarray, rows: np.ndarray,
+                include_vector: bool = False, *,
+                epoch: Optional[int] = None) -> Optional[List[Optional[Hit]]]:
+        """Position-preserving row->Hit translation: one entry per input
+        slot, `None` where the slot is padded/masked.  With `epoch` given,
+        returns `None` (whole call) if a compact() renumbered rows since the
+        caller snapshotted that epoch — the shard scatter-gather path
+        retries instead of serving hits for the wrong entities."""
+        out: List[Optional[Hit]] = []
+        with self._lock:
+            if epoch is not None and self._epoch != epoch:
+                return None
+            for dist, row in zip(d, rows):
+                row = int(row)
+                if row < 0 or not np.isfinite(dist):
+                    out.append(None)
+                    continue
+                out.append(Hit(
+                    id=self._ids[row], score=float(dist),
+                    payload=self._engine.metadata.record(row),
+                    vector=(self._engine.vectors[row].copy()
+                            if include_vector else None)))
+        return out
 
     def execute_plan(self, plan: QueryPlan, *, include_vector: bool = False,
                      timeout: float = 120.0, explain: bool = False
@@ -484,6 +547,18 @@ class Collection:
                 "sparse_seals": sum(s["seals"] for s in agg),
             })
         return out
+
+    def shard_stats(self) -> List[Dict[str, Any]]:
+        """Per-shard breakdown; a plain collection is one shard of one
+        replica, so the wire `ShardStats` op answers uniformly."""
+        with self._lock:
+            rows = len(self._ids)
+            live = len(self._row_of)
+        batcher = self._batcher  # unguarded-ok: atomic snapshot; batcher.stats() is safe post-close
+        depth = (batcher.stats()["queue_depth"] if batcher is not None else 0)
+        return [{"shard": 0, "replicas": 1, "rows": rows, "live": live,
+                 "tombstones": rows - live, "queue_depth": depth,
+                 "slots": None}]
 
     # ----------------------------------------------------------- persistence
     def state_dict(self) -> Dict[str, np.ndarray]:

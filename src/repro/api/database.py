@@ -16,20 +16,33 @@ process — so scenarios move between the two backends without rewrites.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 from ..checkpoint.store import CheckpointStore
+from ..cluster.sharded import ShardedCollection
 from .collection import Collection
 from .schema import (BatcherConfig, CollectionSchema, MetadataField,
                      SchemaError, VectorField)
 
 _SEP = "/"          # namespaces collection arrays inside one checkpoint
 
+# a sharded collection quacks like a Collection everywhere the database
+# (and the serving plane above it) touches one
+AnyCollection = Union[Collection, ShardedCollection]
+
+
+def _build_collection(schema: CollectionSchema) -> AnyCollection:
+    """Topology dispatch: `shards`/`replicas` in the schema pick the
+    engine shape; everything above sees one `Collection`-shaped object."""
+    if schema.shards > 1 or schema.replicas > 1:
+        return ShardedCollection(schema)
+    return Collection(schema)
+
 
 class Database:
     def __init__(self, path: Optional[str] = None):
         self.path = path
-        self._collections: Dict[str, Collection] = {}
+        self._collections: Dict[str, AnyCollection] = {}
         self._store = CheckpointStore(path) if path else None
 
     # ------------------------------------------------------------ management
@@ -39,25 +52,33 @@ class Database:
             name: Optional[str] = None,
             vector: Optional[VectorField] = None,
             fields: Sequence[MetadataField] = (),
-            batcher: Optional[BatcherConfig] = None) -> Collection:
+            batcher: Optional[BatcherConfig] = None,
+            shards: int = 1, replicas: int = 1) -> AnyCollection:
         """Create from a full `CollectionSchema`, or from name/vector/fields
         keyword parts; `batcher=` tunes the serving-batcher knobs
-        (`BatcherConfig(max_batch=..., max_wait_ms=...)`)."""
+        (`BatcherConfig(max_batch=..., max_wait_ms=...)`).  `shards`/
+        `replicas` > 1 build a hash-partitioned `ShardedCollection` behind
+        the same API."""
         if schema is None:
             if name is None or vector is None:
                 raise SchemaError(
                     "pass a CollectionSchema or name= and vector=")
             schema = CollectionSchema(name=name, vector=vector,
-                                      fields=tuple(fields), batcher=batcher)
-        elif batcher is not None:
-            schema = dataclasses.replace(schema, batcher=batcher)
+                                      fields=tuple(fields), batcher=batcher,
+                                      shards=shards, replicas=replicas)
+        else:
+            if batcher is not None:
+                schema = dataclasses.replace(schema, batcher=batcher)
+            if shards != 1 or replicas != 1:
+                schema = dataclasses.replace(schema, shards=shards,
+                                             replicas=replicas)
         if schema.name in self._collections:
             raise SchemaError(f"collection {schema.name!r} already exists")
-        col = Collection(schema)
+        col = _build_collection(schema)
         self._collections[schema.name] = col
         return col
 
-    def collection(self, name: str) -> Collection:
+    def collection(self, name: str) -> AnyCollection:
         if name not in self._collections:
             raise KeyError(f"no collection {name!r}; "
                            f"have {self.list_collections()}")
@@ -121,7 +142,12 @@ class Database:
             prefix = f"{name}{_SEP}"
             sub = {k[len(prefix):]: v for k, v in state.items()
                    if k.startswith(prefix)}
-            db._collections[name] = Collection.from_state_dict(schema, sub)
+            if schema.shards > 1 or schema.replicas > 1:
+                db._collections[name] = ShardedCollection.from_state_dict(
+                    schema, sub)
+            else:
+                db._collections[name] = Collection.from_state_dict(schema,
+                                                                   sub)
         return db
 
     def stats(self) -> Dict[str, Any]:

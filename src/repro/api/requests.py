@@ -271,8 +271,32 @@ class Count(Request):
 
 @dataclasses.dataclass
 class Compact(Request):
+    """`shard` (sharded collections only) compacts one shard instead of
+    the whole collection."""
+
     collection: str
+    shard: Optional[int] = None
     op = "compact"
+
+
+@dataclasses.dataclass
+class Rebalance(Request):
+    """Re-partition a sharded collection onto `shards` shards x `replicas`
+    replicas (None = keep current) via snapshot + re-upsert."""
+
+    collection: str
+    shards: Optional[int] = None
+    replicas: Optional[int] = None
+    op = "rebalance"
+
+
+@dataclasses.dataclass
+class ShardStats(Request):
+    """Per-shard breakdown: rows/tombstones/queue depth, owned hash slots,
+    replica health.  A plain collection answers as one shard."""
+
+    collection: str
+    op = "shard_stats"
 
 
 @dataclasses.dataclass
@@ -306,7 +330,8 @@ class Health(Request):
 
 AnyRequest = Union[CreateCollection, DropCollection, ListCollections,
                    DescribeCollection, Upsert, Delete, Get, Search, Count,
-                   Compact, Stats, Snapshot, Restore, Health]
+                   Compact, Rebalance, ShardStats, Stats, Snapshot, Restore,
+                   Health]
 
 
 def decode_request(d: Dict[str, Any]) -> Request:
@@ -398,6 +423,19 @@ class CountResult(Response):
 @dataclasses.dataclass
 class CompactResult(Response):
     reclaimed: int
+
+
+@dataclasses.dataclass
+class RebalanceResult(Response):
+    shards: int
+    replicas: int
+    rows: int
+    seconds: float
+
+
+@dataclasses.dataclass
+class ShardStatsResult(Response):
+    shards: List[Dict[str, Any]]
 
 
 @dataclasses.dataclass

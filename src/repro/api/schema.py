@@ -274,6 +274,17 @@ class CollectionSchema:
     # defaults, and the service plane may substitute its own defaults —
     # an explicit BatcherConfig always wins over both
     batcher: Optional[BatcherConfig] = None
+    # horizontal layout: rows hash-partition across `shards` engine shards,
+    # each mirrored `replicas` times for read fan-out.  1/1 = the plain
+    # single-engine Collection; anything else materializes a
+    # `repro.cluster.ShardedCollection` behind the same API
+    shards: int = 1
+    replicas: int = 1
+
+    # shards is bounded by the router's hash-slot count (rebalance moves
+    # whole slots, so more shards than slots would leave some empty)
+    MAX_SHARDS = 64
+    MAX_REPLICAS = 8
 
     def __post_init__(self) -> None:
         if not self.name or not isinstance(self.name, str):
@@ -281,6 +292,13 @@ class CollectionSchema:
         if "/" in self.name:
             raise SchemaError("collection name must not contain '/' "
                               "(used as a checkpoint key separator)")
+        for attr, cap in (("shards", self.MAX_SHARDS),
+                          ("replicas", self.MAX_REPLICAS)):
+            value = getattr(self, attr)
+            if isinstance(value, bool) or not isinstance(value, int) \
+                    or not 1 <= value <= cap:
+                raise SchemaError(
+                    f"{attr} must be an int in [1, {cap}], got {value!r}")
         object.__setattr__(self, "fields", tuple(self.fields))
         names = [f.name for f in self.fields]
         if len(set(names)) != len(names):
@@ -345,6 +363,12 @@ class CollectionSchema:
                "fields": [f.to_dict() for f in self.fields]}
         if self.batcher is not None:
             out["batcher"] = self.batcher.to_dict()
+        # serialized only when non-default, so pre-cluster snapshots and
+        # wire payloads stay byte-identical
+        if self.shards != 1:
+            out["shards"] = self.shards
+        if self.replicas != 1:
+            out["replicas"] = self.replicas
         return out
 
     @classmethod
@@ -359,4 +383,6 @@ class CollectionSchema:
                    fields=tuple(field_from_dict(f)
                                 for f in d.get("fields", ())),
                    batcher=(BatcherConfig(**batcher) if batcher is not None
-                            else None))
+                            else None),
+                   shards=d.get("shards", 1),
+                   replicas=d.get("replicas", 1))

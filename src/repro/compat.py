@@ -1,0 +1,33 @@
+"""Cross-version jax compatibility shims shared by every mesh program.
+
+jax moved `shard_map` out of `jax.experimental` (>= 0.6, with the
+replication checker renamed `check_rep` -> `check_vma`) and grew
+`jax.lax.axis_size` as the static axis-size query.  Every module that
+lowers a shard_map program needs the same two fallbacks; they live here
+once so version bumps touch one file instead of each caller.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    def shard_map_compat(f, mesh, in_specs, out_specs):
+        """`shard_map` with replication checking off (the varying-axes
+        checker cannot see through cross-shard gather + top_k)."""
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map_compat(f, mesh, in_specs, out_specs):
+        """`shard_map` with replication checking off (the varying-axes
+        checker cannot see through cross-shard gather + top_k)."""
+        return _sm(f, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:                                              # jax 0.4.x: folds to const
+    def axis_size(ax):
+        return jax.lax.psum(1, ax)

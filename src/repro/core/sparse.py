@@ -99,6 +99,37 @@ def _idf(n_docs: int, df: np.ndarray) -> np.ndarray:
     return np.log1p((n_docs - df + 0.5) / (df + 0.5))
 
 
+@dataclasses.dataclass(frozen=True)
+class CorpusStats:
+    """Externally-supplied BM25 corpus statistics (N, avgdl, per-token df).
+
+    A sharded corpus scores each shard with *global* statistics — local
+    df/avgdl would make scores incomparable across shards — so the caller
+    gathers every shard's `SparseIndex.term_stats()`, sums them, and passes
+    the aggregate back into each shard's `search(stats=...)`.  Summing the
+    integer counters before the float divisions reproduces the exact
+    float64 values a single unsharded index computes, so the distributed
+    merge stays hit-for-hit identical to the single-engine ranking.
+    """
+
+    docs_with_text: int
+    avgdl: float
+    df: Dict[str, int]
+
+    @classmethod
+    def aggregate(cls, parts: Sequence[Tuple[int, int, Dict[str, int]]]
+                  ) -> "CorpusStats":
+        """Sum per-shard `term_stats()` tuples into global statistics."""
+        docs = sum(p[0] for p in parts)
+        total = sum(p[1] for p in parts)
+        df: Dict[str, int] = {}
+        for _, _, part_df in parts:
+            for tok, n in part_df.items():
+                df[tok] = df.get(tok, 0) + n
+        return cls(docs_with_text=docs,
+                   avgdl=(total / docs if docs else 1.0), df=df)
+
+
 class SparseIndex:
     """Incremental inverted index with BM25 scoring (sealed + delta).
 
@@ -233,33 +264,52 @@ class SparseIndex:
             return parts_r[0], parts_t[0]
         return np.concatenate(parts_r), np.concatenate(parts_t)
 
-    def _norm(self) -> Tuple[np.ndarray, float]:
-        """(per-doc length-normalization denominator term, avgdl)."""
+    def _norm(self, avgdl: Optional[float] = None
+              ) -> Tuple[np.ndarray, float]:
+        """(per-doc length-normalization denominator term, avgdl); pass
+        ``avgdl`` to normalize against global (cross-shard) statistics."""
         lens = np.asarray(self._doc_lens, dtype=np.float64)
-        avgdl = (self._total_tokens / self._docs_with_text
-                 if self._docs_with_text else 1.0)
+        if avgdl is None:
+            avgdl = (self._total_tokens / self._docs_with_text
+                     if self._docs_with_text else 1.0)
         return self.k1 * (1.0 - self.b + self.b * lens / avgdl), avgdl
 
+    def term_stats(self, tokens: Sequence[str]
+                   ) -> Tuple[int, int, Dict[str, int]]:
+        """This index's contribution to global BM25 statistics:
+        (docs with text, total tokens, per-query-token document
+        frequency).  `CorpusStats.aggregate` sums these across shards."""
+        return (self._docs_with_text, self._total_tokens,
+                {tok: int(self._postings(tok)[0].shape[0])
+                 for tok in tokens})
+
     # --------------------------------------------------------------- scoring
-    def scores(self, tokens: Sequence[str]) -> np.ndarray:
+    def scores(self, tokens: Sequence[str],
+               stats: Optional[CorpusStats] = None) -> np.ndarray:
         """Dense (n_rows,) float64 BM25 scores for already-deduped query
-        tokens — the vectorized numpy path `search()` ranks with."""
+        tokens — the vectorized numpy path `search()` ranks with.  `stats`
+        substitutes global (cross-shard) corpus statistics for this
+        index's local ones."""
         n = len(self._doc_lens)
         out = np.zeros(n, dtype=np.float64)
-        if n == 0 or not self._docs_with_text:
+        n_docs = stats.docs_with_text if stats else self._docs_with_text
+        if n == 0 or not n_docs:
             return out
-        norm, _ = self._norm()
+        norm, _ = self._norm(stats.avgdl if stats else None)
         for tok in tokens:
             rows, tfs = self._postings(tok)
             if rows.shape[0] == 0:
                 continue
-            idf = float(_idf(self._docs_with_text, rows.shape[0]))
+            df = stats.df.get(tok, int(rows.shape[0])) if stats \
+                else int(rows.shape[0])
+            idf = float(_idf(n_docs, df))
             tf = tfs.astype(np.float64)
             contrib = idf * tf * (self.k1 + 1.0) / (tf + norm[rows])
             np.add.at(out, rows, contrib)
         return out
 
-    def scores_jax(self, tokens: Sequence[str]) -> np.ndarray:
+    def scores_jax(self, tokens: Sequence[str],
+                   stats: Optional[CorpusStats] = None) -> np.ndarray:
         """Batched JAX scoring over the packed postings of the query's
         tokens: one gather of (rows, tfs, per-posting idf), one fused
         contribution computation, one scatter-add into the dense score
@@ -269,20 +319,23 @@ class SparseIndex:
         import jax.numpy as jnp
 
         n = len(self._doc_lens)
-        if n == 0 or not self._docs_with_text:
+        n_docs = stats.docs_with_text if stats else self._docs_with_text
+        if n == 0 or not n_docs:
             return np.zeros(n, dtype=np.float64)
-        gathered = [self._postings(tok) for tok in tokens]
-        gathered = [(r, t) for r, t in gathered if r.shape[0]]
+        gathered = [(tok, *self._postings(tok)) for tok in tokens]
+        gathered = [(tok, r, t) for tok, r, t in gathered if r.shape[0]]
         if not gathered:
             return np.zeros(n, dtype=np.float64)
-        rows = np.concatenate([r for r, _ in gathered])
-        tfs = np.concatenate([t for _, t in gathered]).astype(np.float32)
+        rows = np.concatenate([r for _, r, _ in gathered])
+        tfs = np.concatenate([t for _, _, t in gathered]).astype(np.float32)
         idf = np.concatenate([
             np.full(r.shape[0],
-                    float(_idf(self._docs_with_text, r.shape[0])),
+                    float(_idf(n_docs,
+                               stats.df.get(tok, int(r.shape[0])) if stats
+                               else int(r.shape[0]))),
                     dtype=np.float32)
-            for r, _ in gathered])
-        norm, _ = self._norm()
+            for tok, r, _ in gathered])
+        norm, _ = self._norm(stats.avgdl if stats else None)
         norm_g = norm.astype(np.float32)[rows]
         contrib = jnp.asarray(idf) * jnp.asarray(tfs) * (self.k1 + 1.0) \
             / (jnp.asarray(tfs) + jnp.asarray(norm_g))
@@ -292,17 +345,20 @@ class SparseIndex:
 
     def search(self, text: str, k: int,
                mask: Optional[np.ndarray] = None,
-               backend: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
+               backend: str = "numpy",
+               stats: Optional[CorpusStats] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k BM25 search.  Returns padded (k,) arrays in the engine's
         candidate convention: distances = **negated** scores ascending
         (best first), +inf / row -1 for empty slots; `mask` (row liveness
         and/or a metadata filter) removes candidates but does not change
-        the corpus statistics.  Ties break on ascending row id."""
+        the corpus statistics.  Ties break on ascending row id.  `stats`
+        scores against global (cross-shard) corpus statistics."""
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
         tokens = self.config.query_tokens(text)
         scorer = self.scores_jax if backend == "jax" else self.scores
-        scores = scorer(tokens)
+        scores = scorer(tokens, stats=stats)
         if mask is not None:
             m = np.asarray(mask, dtype=bool)
             scores = np.where(m[:scores.shape[0]], scores, 0.0)

@@ -23,26 +23,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import axis_size as _axis_size
+from ..compat import shard_map_compat as _shard_map
 from ..launch.mesh import batch_axes, mesh_axis_sizes
 
 Array = jax.Array
-
-if hasattr(jax, "shard_map"):                      # jax >= 0.6
-    def _shard_map(f, mesh, in_specs, out_specs):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-else:                                              # jax 0.4.x
-    from jax.experimental.shard_map import shard_map as _sm
-
-    def _shard_map(f, mesh, in_specs, out_specs):
-        return _sm(f, mesh=mesh, in_specs=in_specs,
-                   out_specs=out_specs, check_rep=False)
-
-if hasattr(jax.lax, "axis_size"):
-    _axis_size = jax.lax.axis_size
-else:                                              # jax 0.4.x: folds to const
-    def _axis_size(ax):
-        return jax.lax.psum(1, ax)
 
 
 def _model_in_mesh(mesh: Mesh, feature_dim: int = 0) -> bool:

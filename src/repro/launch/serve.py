@@ -31,9 +31,11 @@ from ..data.synthetic import gaussian_mixture
 
 def build_database(n: int, dim: int, index: str, quant: str,
                    seed: int = 0, max_batch: int = 32,
-                   max_wait_ms: float = 2.0, expansion_width: int = 4):
+                   max_wait_ms: float = 2.0, expansion_width: int = 4,
+                   shards: int = 1):
     """Returns (db, corpus) so callers score recall against exactly the
-    vectors that were indexed."""
+    vectors that were indexed.  `shards > 1` builds a `ShardedCollection`
+    (hash-partitioned scatter-gather) instead of a single engine."""
     db = Database()
     col = db.create_collection(
         name="corpus",
@@ -41,7 +43,8 @@ def build_database(n: int, dim: int, index: str, quant: str,
                            builder="bulk",
                            hnsw=HNSWConfig(expansion_width=expansion_width)),
         fields=(KeywordField("shard"),),
-        batcher=BatcherConfig(max_batch=max_batch, max_wait_ms=max_wait_ms))
+        batcher=BatcherConfig(max_batch=max_batch, max_wait_ms=max_wait_ms),
+        shards=shards)
     corpus = gaussian_mixture(n, dim, seed=seed)
     ids = [f"vec-{i}" for i in range(n)]
     payloads = [{"shard": f"s{i % 8}"} for i in range(n)]

@@ -189,8 +189,22 @@ class RequestBatcher:
             try:
                 k = max(r.k for r in batch)
                 queries = np.stack([r.query for r in batch])
+                # pad the batch up to the next power of two (capped at
+                # max_batch): the jitted search kernels specialize on the
+                # query-count dimension, so free-running batch sizes would
+                # trigger a fresh ~100ms XLA compile per novel size — per
+                # corpus shape, so per shard.  Bucketing bounds that to
+                # log2(max_batch) shapes at <= 2x padded compute.
+                bucket = min(self.max_batch,
+                             1 << (len(batch) - 1).bit_length())
+                if bucket > len(batch):
+                    fill = np.broadcast_to(
+                        queries[:1], (bucket - len(batch),) +
+                        queries.shape[1:])
+                    queries = np.concatenate([queries, fill])
                 d, ids = self._search(queries, k, **first.extras)
-                d, ids = np.asarray(d), np.asarray(ids)
+                d, ids = np.asarray(d)[: len(batch)], \
+                    np.asarray(ids)[: len(batch)]
             except Exception as exc:          # surface, don't kill the loop
                 for r in batch:
                     r.future.set_exception(exc)

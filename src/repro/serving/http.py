@@ -26,7 +26,9 @@ Routes (all under /v1):
                                                 or {"plan": {...}, "explain"}
     POST   /v1/collections/{name}/count         {"filter": {...}}
     GET    /v1/collections/{name}/count
-    POST   /v1/collections/{name}/compact
+    POST   /v1/collections/{name}/compact       {"shard": N} (optional)
+    POST   /v1/collections/{name}/rebalance     {"shards", "replicas"}
+    GET    /v1/collections/{name}/shards
     GET    /v1/collections/{name}/stats
     GET    /v1/stats
     POST   /v1/snapshot                         {"path", "step"}
@@ -173,7 +175,19 @@ def _r_count(body, name):
 
 @_route("POST", r"^/v1/collections/([^/]+)/compact$")
 def _r_compact(body, name):
-    return rq.Compact(collection=name)
+    # ?shard=N (or body {"shard": N}) compacts one shard of a sharded
+    # collection instead of the whole thing
+    return _build(rq.Compact, collection=name, **body)
+
+
+@_route("POST", r"^/v1/collections/([^/]+)/rebalance$")
+def _r_rebalance(body, name):
+    return _build(rq.Rebalance, collection=name, **body)
+
+
+@_route("GET", r"^/v1/collections/([^/]+)/shards$")
+def _r_shard_stats(body, name):
+    return rq.ShardStats(collection=name)
 
 
 @_route("GET", r"^/v1/collections/([^/]+)/stats$")
@@ -302,6 +316,15 @@ class _Handler(BaseHTTPRequestHandler):
             pass                             # client went away mid-reply
 
 
+class _Server(ThreadingHTTPServer):
+    daemon_threads = True
+    # socketserver's default listen backlog is 5; a concurrent client wave
+    # (the smoke test fires 100+ simultaneous connects) overflows it while
+    # the first requests hold the accept loop, and overflowed connects
+    # surface as connection-reset on loaded 1-core boxes
+    request_queue_size = 256
+
+
 class QuantixarHTTPServer:
     """Embedded server: `start()` for a background thread (tests, drivers),
     `serve_forever()` for a foreground process (`repro.launch.serve`)."""
@@ -311,8 +334,7 @@ class QuantixarHTTPServer:
                  config: Optional[ServiceConfig] = None,
                  verbose: bool = False):
         self.service = service or QuantixarService(config=config)
-        self._httpd = ThreadingHTTPServer((host, port), _Handler)
-        self._httpd.daemon_threads = True
+        self._httpd = _Server((host, port), _Handler)
         self._httpd.quantixar_service = self.service
         self._httpd.verbose = verbose
         self._thread: Optional[threading.Thread] = None

@@ -32,6 +32,7 @@ from ..api.database import Database
 from ..api.plan import plan_from_dict
 from ..api.query import Hit
 from ..api.schema import BatcherConfig, CollectionSchema, SchemaError
+from ..cluster.sharded import ShardedCollection, ShardUnavailable
 from .batcher import BatcherClosed
 
 
@@ -69,9 +70,10 @@ def to_error_info(exc: BaseException) -> rq.ErrorInfo:
         return rq.ErrorInfo(rq.NOT_FOUND, str(exc))
     if isinstance(exc, TimeoutError):
         return rq.ErrorInfo(rq.UNAVAILABLE, str(exc) or "request timed out")
-    # shutdown / compaction churn: transient, the caller should retry
+    # shutdown / compaction churn / a shard with no healthy replicas:
+    # transient, the caller should retry
     if isinstance(exc, (BatcherClosed, CollectionClosed,
-                        QueryRetriesExhausted)):
+                        QueryRetriesExhausted, ShardUnavailable)):
         return rq.ErrorInfo(rq.UNAVAILABLE, str(exc))
     if isinstance(exc, RuntimeError):
         return rq.ErrorInfo(rq.INTERNAL, str(exc))
@@ -250,7 +252,30 @@ class QuantixarService:
 
     def _compact(self, req: rq.Compact) -> rq.CompactResult:
         col = self._col(req.collection)
+        if req.shard is not None:
+            if not isinstance(col, ShardedCollection):
+                raise ValueError(     # -> INVALID_ARGUMENT
+                    f"collection {req.collection!r} is not sharded; "
+                    f"omit 'shard'")
+            return rq.CompactResult(reclaimed=col.compact(shard=req.shard))
         return rq.CompactResult(reclaimed=col.compact())
+
+    def _rebalance(self, req: rq.Rebalance) -> rq.RebalanceResult:
+        col = self._col(req.collection)
+        if not isinstance(col, ShardedCollection):
+            raise ValueError(         # -> INVALID_ARGUMENT
+                f"collection {req.collection!r} is not sharded; create it "
+                f"with shards > 1 or replicas > 1 to rebalance")
+        info = col.rebalance(shards=req.shards, replicas=req.replicas)
+        return rq.RebalanceResult(shards=info["shards"],
+                                  replicas=info["replicas"],
+                                  rows=info["rows"],
+                                  seconds=info["seconds"])
+
+    def _shard_stats(self, req: rq.ShardStats) -> rq.ShardStatsResult:
+        # uniform: a plain collection answers as one shard of one replica
+        return rq.ShardStatsResult(
+            shards=self._col(req.collection).shard_stats())
 
     def _stats(self, req: rq.Stats) -> rq.StatsResult:
         if req.collection is not None:
@@ -284,6 +309,8 @@ class QuantixarService:
         rq.Search: _search,
         rq.Count: _count,
         rq.Compact: _compact,
+        rq.Rebalance: _rebalance,
+        rq.ShardStats: _shard_stats,
         rq.Stats: _stats,
         rq.Snapshot: _snapshot,
         rq.Restore: _restore,

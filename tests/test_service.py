@@ -69,14 +69,15 @@ def _payloads(n=N):
              "in_stock": i % 3 == 0} for i in range(n)]
 
 
-def _make(backend, corpus, name="items", n=N, batcher=None, **vector_kw):
+def _make(backend, corpus, name="items", n=N, batcher=None, shards=1,
+          replicas=1, **vector_kw):
     vector_kw.setdefault("dim", DIM)
     vector_kw.setdefault("index", "flat")
     col = backend.create_collection(
         name=name, vector=VectorField(**vector_kw),
         fields=(KeywordField("category"), NumericField("price"),
                 BoolField("in_stock")),
-        batcher=batcher)
+        batcher=batcher, shards=shards, replicas=replicas)
     col.upsert(_ids(n), corpus[:n], _payloads(n))
     return col
 
@@ -887,3 +888,279 @@ class TestSparsePlanCodec:
             assert status == 400
             assert envelope["error"]["code"] == rq.SCHEMA_ERROR
             assert "Traceback" not in json.dumps(envelope)
+
+
+# ------------------------------------------------------------------ sharding
+# PR 10: `ShardedCollection` must be hit-for-hit identical to a single-shard
+# `Collection` over the same rows — for every quantization, dense / hybrid /
+# filtered, embedded and over the wire — and must survive rebalance, replica
+# failure, and save/load.
+SH_N = 160                       # smaller corpus keeps the 3-quant matrix fast
+
+_SH_QUANTS = {
+    "none": {},
+    "pq": {"quantization": "pq"},
+    "bq": {"quantization": "bq"},
+}
+
+
+def _make_sharded_pair(backend, corpus, shards=3, replicas=1, n=SH_N,
+                       **vector_kw):
+    """Build (sharded, single-shard) twins over identical rows, with both
+    keyword/numeric fields (filtered legs) and a text field (hybrid legs)."""
+    from repro.core import PQConfig
+    vector_kw.setdefault("dim", DIM)
+    vector_kw.setdefault("index", "flat")
+    if vector_kw.get("quantization") == "pq":
+        vector_kw.setdefault("pq", PQConfig(m=8, k=16, iters=4))
+    fields = (KeywordField("category"), NumericField("price"),
+              BoolField("in_stock"), TextField("body"))
+    payloads = [{"category": f"cat-{i % 4}", "price": float(i % 50),
+                 "in_stock": i % 3 == 0, "body": _TEXTS[i % len(_TEXTS)]}
+                for i in range(n)]
+    cols = []
+    for name, s, r in (("sharded_tw", shards, replicas),
+                       ("single_tw", 1, 1)):
+        col = backend.create_collection(
+            name=name, vector=VectorField(**vector_kw), fields=fields,
+            shards=s, replicas=r)
+        col.upsert(_ids(n), corpus[:n], payloads)
+        cols.append(col)
+    return cols
+
+
+def _sh_builders(n=SH_N):
+    """Query builders exact under every quantization: coarse_k covers the
+    whole corpus, so the final exact rescore fully determines the ranking
+    on both sides (per-shard PQ/BQ codebooks differ by construction)."""
+    return {
+        "dense": lambda c, q: c.query(q).top_k(8).stages(coarse_k=n),
+        "filtered": lambda c, q: (c.query(q).filter(category="cat-1")
+                                  .where("price", "lt", 30).top_k(8)
+                                  .stages(coarse_k=n)),
+        "hybrid": lambda c, q: (c.query(q).top_k(6)
+                                .prefetch(k=n, coarse_k=n)
+                                .prefetch(text="quick fox", k=n)
+                                .fuse("rrf")),
+    }
+
+
+def _same_hits(got, want, tag=""):
+    assert [(h.id, pytest.approx(h.score, rel=1e-5)) for h in got] \
+        == [(h.id, h.score) for h in want], tag
+
+
+class TestShardedParity:
+    """Runs twice per quantization: embedded and over the wire."""
+
+    @pytest.mark.parametrize("quant", sorted(_SH_QUANTS))
+    def test_sharded_matches_single_hit_for_hit(self, backend, corpus,
+                                                queries, quant):
+        sharded, single = _make_sharded_pair(backend, corpus,
+                                             **_SH_QUANTS[quant])
+        for mode, build in _sh_builders().items():
+            for qi in range(2):
+                _same_hits(build(sharded, queries[qi]).run(),
+                           build(single, queries[qi]).run(),
+                           f"{quant}/{mode}/q{qi}")
+        # batched (2-D) queries take the direct scatter path
+        wide = sharded.query(queries[:3]).top_k(5).stages(coarse_k=SH_N).run()
+        ref = single.query(queries[:3]).top_k(5).stages(coarse_k=SH_N).run()
+        for w_row, r_row in zip(wide, ref):
+            _same_hits(w_row, r_row, f"{quant}/batched")
+
+    def test_sharded_crud_and_stats(self, backend, corpus):
+        sharded, single = _make_sharded_pair(backend, corpus)
+        assert len(sharded) == len(single) == SH_N
+        e = sharded.get("item-7")
+        assert e.id == "item-7" and e.payload["category"] == "cat-3"
+        assert sharded.get("missing") is None
+        assert sharded.delete(["item-7", "item-8", "missing"]) == 2
+        assert len(sharded) == SH_N - 2
+        assert sharded.count(Predicate("category", "eq", "cat-1")) \
+            == single.count(Predicate("category", "eq", "cat-1"))
+        ss = sharded.shard_stats()
+        assert len(ss) == 3
+        assert sum(s["rows"] for s in ss) == SH_N
+        assert sum(s["tombstones"] for s in ss) == 2
+        assert sharded.compact() == 2
+        assert len(single.shard_stats()) == 1     # uniform surface
+
+    def test_per_shard_compact_and_seal(self, backend, corpus):
+        sharded, _ = _make_sharded_pair(backend, corpus)
+        sharded.delete([f"item-{i}" for i in range(20)])
+        per_shard = [s["tombstones"] for s in sharded.shard_stats()]
+        assert sum(per_shard) == 20
+        reclaimed = sharded.compact(shard=0)
+        assert reclaimed == per_shard[0]
+        rest = sharded.compact()                  # the other shards
+        assert reclaimed + rest == 20
+        assert all(s["tombstones"] == 0 for s in sharded.shard_stats())
+
+
+class TestShardedTopology:
+    """Rebalance / split / slot-move / replication — embedded API."""
+
+    def test_rebalance_preserves_results(self, corpus, queries, tmp_path):
+        db = Database()
+        sharded, single = _make_sharded_pair(db, corpus, shards=3)
+        build = _sh_builders()["hybrid"]
+        want = [build(single, q).run() for q in queries[:2]]
+
+        for step, mutate in (
+                ("grow", lambda: sharded.rebalance(shards=5)),
+                ("shrink", lambda: sharded.rebalance(
+                    shards=2, snapshot_dir=str(tmp_path / "shrink"))),
+                ("split", lambda: sharded.split(0)),
+                ("replicate", lambda: sharded.rebalance(replicas=2))):
+            info = mutate()
+            assert info["rows"] == SH_N, step
+            for qi in range(2):
+                _same_hits(build(sharded, queries[qi]).run(), want[qi],
+                           f"after {step}")
+        assert sharded.num_shards == 3            # 2 + split
+        # writes still land correctly after all the topology churn
+        sharded.upsert("item-0", corpus[1], [{"category": "cat-9",
+                                              "body": "quick fox"}])
+        assert sharded.get("item-0").payload["category"] == "cat-9"
+        db.close()
+
+    def test_move_slot(self, corpus, queries):
+        from repro.cluster import slot_of
+        db = Database()
+        sharded, single = _make_sharded_pair(db, corpus, shards=2)
+        before = [h.id for h in sharded.query(queries[0]).top_k(10).run()]
+        slot = slot_of("item-0")
+        owner = sharded._router.slot_map[slot]
+        sharded.move_slot(slot, 1 - owner)
+        assert sharded._router.slot_map[slot] == 1 - owner
+        assert sharded.get("item-0") is not None
+        assert [h.id for h in
+                sharded.query(queries[0]).top_k(10).run()] == before
+        db.close()
+
+    def test_replica_failover(self, corpus, queries):
+        from repro.api import ShardUnavailable
+        db = Database()
+        sharded, single = _make_sharded_pair(db, corpus, shards=2,
+                                             replicas=2)
+        want = single.query(queries[0]).top_k(8).run()
+        _same_hits(sharded.query(queries[0]).top_k(8).run(), want, "healthy")
+        sharded.set_replica_health(0, 0, False)   # primary of shard 0 down
+        _same_hits(sharded.query(queries[0]).top_k(8).run(), want,
+                   "one replica down")
+        assert sharded.get("item-0") is not None
+        sharded.set_replica_health(0, 1, False)   # whole shard dark
+        with pytest.raises(ShardUnavailable):
+            sharded.query(queries[0]).top_k(8).run()
+        sharded.set_replica_health(0, 0, True)    # recovery
+        _same_hits(sharded.query(queries[0]).top_k(8).run(), want,
+                   "recovered")
+        db.close()
+
+    def test_sharded_save_load_roundtrip(self, corpus, queries, tmp_path):
+        from repro.api import ShardedCollection
+        db = Database(str(tmp_path))
+        sharded, single = _make_sharded_pair(db, corpus, shards=3,
+                                             replicas=2)
+        sharded.delete(["item-3"])
+        want = [h.id for h in sharded.query(queries[0]).top_k(8).run()]
+        db.save()
+        db.close()
+
+        db2 = Database.load(str(tmp_path))
+        col = db2.collection("sharded_tw")
+        assert isinstance(col, ShardedCollection)
+        assert col.num_shards == 3 and col.schema.replicas == 2
+        assert len(col) == SH_N - 1 and col.get("item-3") is None
+        assert [h.id for h in
+                col.query(queries[0]).top_k(8).run()] == want
+        # restored collection is fully live: writes and topology changes work
+        col.upsert("item-new", corpus[0], [{"category": "cat-0",
+                                            "body": "quick fox"}])
+        col.rebalance(shards=2)
+        assert col.get("item-new") is not None
+        db2.close()
+
+
+class TestShardedWire:
+    """The new wire ops (Rebalance / ShardStats / per-shard Compact) and
+    sharded snapshot/restore over HTTP."""
+
+    def test_sharded_ops_over_wire(self, server, client, corpus, queries):
+        remote = _make(client, corpus, name="swire", n=SH_N, shards=3)
+        want = [h.id for h in remote.query(queries[0]).top_k(8).run()]
+
+        ss = remote.shard_stats()
+        assert len(ss) == 3 and sum(s["rows"] for s in ss) == SH_N
+        assert all(s["health"] == [True] for s in ss)
+
+        info = remote.rebalance(shards=2)
+        assert info["shards"] == 2 and info["rows"] == SH_N
+        assert len(remote.shard_stats()) == 2
+        assert [h.id for h in
+                remote.query(queries[0]).top_k(8).run()] == want
+
+        remote.delete([f"item-{i}" for i in range(10)])
+        reclaimed = remote.compact(shard=0) + remote.compact(shard=1)
+        assert reclaimed == 10
+        assert remote.compact() == 0
+
+        # raw envelopes: GET /shards routes; rebalance on an unsharded
+        # collection is INVALID_ARGUMENT, not a 500
+        status, env = TestStructuredErrors._raw(
+            server, "GET", "/v1/collections/swire/shards")
+        assert status == 200 and len(env["result"]["shards"]) == 2
+        _make(client, corpus, name="unsharded", n=20)
+        status, env = TestStructuredErrors._raw(
+            server, "POST", "/v1/collections/unsharded/rebalance",
+            json.dumps({"shards": 2}))
+        assert status == 400
+        assert env["error"]["code"] == rq.INVALID_ARGUMENT
+        status, env = TestStructuredErrors._raw(
+            server, "POST", "/v1/collections/unsharded/compact",
+            json.dumps({"shard": 0}))
+        assert status == 400
+        # and the raw rpc envelope speaks the new ops too
+        status, env = TestStructuredErrors._raw(
+            server, "POST", "/v1/rpc",
+            json.dumps(rq.ShardStats(collection="swire").to_dict()))
+        assert status == 200
+        assert len(env["result"]["shards"]) == 2
+
+    def test_sharded_wire_matches_embedded(self, client, corpus, queries):
+        remote_pair = _make_sharded_pair(client, corpus, shards=3)
+        db = Database()
+        local_pair = _make_sharded_pair(db, corpus, shards=3)
+        build = _sh_builders()["hybrid"]
+        _same_hits(build(remote_pair[0], queries[0]).run(),
+                   build(local_pair[0], queries[0]).run(), "wire vs embedded")
+        # explain carries per-shard timings over the wire
+        ex = remote_pair[0].query(queries[0]).top_k(5).explain()
+        ann = next(s for s in ex.stages if s["stage"] == "ann")
+        assert len(ann["shards"]) == 3
+        assert all(s["seconds"] >= 0 for s in ann["shards"])
+        db.close()
+
+    def test_sharded_snapshot_restore_over_wire(self, client, corpus,
+                                                queries, tmp_path):
+        remote = _make(client, corpus, name="snapme", n=SH_N, shards=3)
+        remote.delete(["item-0"])
+        want = [h.id for h in remote.query(queries[1]).top_k(8).run()]
+        gen = client.snapshot(str(tmp_path))
+        remote.delete([f"item-{i}" for i in range(1, 40)])  # post-snapshot
+        assert "snapme" in client.restore(str(tmp_path), generation=gen)
+        restored = client.collection("snapme")
+        assert restored.schema.shards == 3
+        assert len(restored) == SH_N - 1                    # damage undone
+        assert [h.id for h in
+                restored.query(queries[1]).top_k(8).run()] == want
+        assert len(restored.shard_stats()) == 3
+
+    def test_sharded_stats_over_wire(self, client, corpus):
+        remote = _make(client, corpus, name="statsy", n=SH_N, shards=2,
+                       replicas=2)
+        stats = remote.stats()
+        assert stats["shards"] == 2 and stats["replicas"] == 2
+        assert stats["live"] == SH_N
+        assert len(stats["per_shard"]) == 2
